@@ -1,0 +1,121 @@
+"""Paper Experiment 3 (Fig 10): LLaMA first-token inference (prefill),
+EinDecomp vs the hand-written decompositions — Megatron (shard heads/ffn),
+"sequence" (shard s), "attention" (shard heads only), data-parallel.
+
+All plans are costed with the same §7 objective on the same llama-7b
+prefill EinGraph (apples-to-apples, as the paper implements all baselines
+on Einsummable).  Sweeps batch size at 4k tokens and GPU count at 1k/4k
+tokens, mirroring the three panels of Fig 10.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.decomp import (Plan, eindecomp, node_bounds,
+                               node_label_universe, plan_cost)
+from repro.models.eingraphs import build_graph
+
+
+def manual(g, p, assign: dict[str, int]) -> Plan:
+    plan = Plan(p=p, mode="pow2")
+    for n in g.nodes:
+        labels = node_label_universe(n)
+        bounds = node_bounds(g, n.nid)
+        d = {l: 1 for l in labels}
+        for l, ways in assign.items():
+            if l in d and bounds[l] % ways == 0:
+                d[l] = ways
+        plan.d_by_node[n.nid] = d
+    plan.cost = plan_cost(g, plan)
+    return plan
+
+
+def plans_for(g, p):
+    return {
+        "eindecomp": eindecomp(g, p, offpath_repart=True),
+        "eindecomp_paper_lin": eindecomp(g, p, offpath_repart=False),
+        "megatron": manual(g, p, {"b": 1, "h": p, "k": p, "f": p, "v": p}),
+        "sequence": manual(g, p, {"s": p}),
+        "attention": manual(g, p, {"h": p, "k": p}),
+        "data_parallel": manual(g, p, {"b": p}),
+    }
+
+
+def _work_note(g, plan, p) -> str:
+    """Manual plans may under-decompose some nodes (< p parallel pieces) —
+    cheap on the §7 cost but idles devices; annotate for honesty."""
+    starved = 0
+    for n in g.nodes:
+        if n.kind == "input":
+            continue
+        d = plan.d_by_node.get(n.nid, {})
+        work = 1
+        for v in d.values():
+            work *= v
+        if work < p:
+            starved += 1
+    return f"UNDERDECOMPOSED:{starved}nodes" if starved else ""
+
+
+def run() -> list[tuple]:
+    cfg = get_config("llama-7b")
+    rows = []
+    # panel 1: 8 devices, 4096 tokens, batch swept
+    for batch in (1, 4, 16):
+        g = build_graph(cfg, ShapeConfig("ftinf", "prefill", 4096, batch))
+        for name, plan in plans_for(g, 8).items():
+            rows.append((f"exp3_ftinf4k_b{batch}_p8_{name}", plan.cost,
+                         _work_note(g, plan, 8)))
+    # panels 2+3: batch 8 @1k and batch 4 @4k, device count swept
+    for seq, batch in ((1024, 8), (4096, 4)):
+        for p in (2, 4, 8):
+            g = build_graph(cfg, ShapeConfig("ftinf", "prefill", seq, batch))
+            for name, plan in plans_for(g, p).items():
+                rows.append((f"exp3_s{seq}_b{batch}_p{p}_{name}",
+                             plan.cost, _work_note(g, plan, p)))
+    return rows
+
+
+def run_wallclock() -> list[tuple]:
+    """Wall-clock of a scaled-down llama prefill under the EinDecomp policy
+    vs manual policies, through the production (GSPMD) path on host
+    devices."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import reduced
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_host_mesh, mesh_axes_dict
+    from repro.models import transformer as tf
+    from repro.models.eingraphs import plan_for
+    from repro.models.policy import manual_policy
+
+    cfg = reduced(get_config("llama-7b"))
+    mesh = make_host_mesh((1, 1))
+    shape = ShapeConfig("ftinf", "prefill", 128, 4)
+    _, _, auto_policy = plan_for(cfg, shape, mesh_axes_dict(mesh))
+    policies = {
+        "eindecomp": auto_policy,
+        "megatron": manual_policy({"h": "model", "f": "model", "v": "model",
+                                   "b": "data"}),
+        "sequence": manual_policy({"s": "model", "b": "data"}),
+    }
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 128)), jnp.int32)
+    rows = []
+    for name, pol in policies.items():
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
+        params = jax.device_put(params, tf.param_shardings(cfg, pol, mesh))
+        step = jax.jit(steps_mod.make_prefill_step(cfg, policy=pol, mesh=mesh))
+        logits, _ = step(params, {"tokens": toks})  # compile
+        jax.block_until_ready(logits)
+        t0 = time.time()
+        for _ in range(3):
+            logits, _ = step(params, {"tokens": toks})
+        jax.block_until_ready(logits)
+        rows.append((f"exp3_wall_prefill_{name}",
+                     (time.time() - t0) / 3 * 1e6, ""))
+    return rows

@@ -1,0 +1,85 @@
+"""Paper Experiment 1 (Figs 7-8): matrix-chain (A·B) + (C·(D·E)).
+
+Two regimes exactly as §9.2:
+  * uniform — all matrices s x s
+  * skewed  — A: s x .1s, B: .1s x s, C: s x .1s, D: .1s x 10s, E: 10s x s
+
+Compared decompositions (all executed through the same machinery, like the
+paper runs all baselines on Einsummable):
+  * EinDecomp (this paper, + our consumer-aware linearization)
+  * SQRT (slice first two dims sqrt(p) ways) — the paper's baseline
+plus wall-clock on host devices via the sharded engine.
+
+Outputs CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.decomp import eindecomp, plan_cost, plan_sqrt
+from repro.core.einsum import EinGraph
+
+
+def chain_graph(s: int, skewed: bool) -> EinGraph:
+    g = EinGraph("chain")
+    t = max(int(0.1 * s), 2)
+    u = 10 * s if skewed else s
+    if skewed:
+        A = g.input("A", "ij", (s, t))
+        B = g.input("B", "jk", (t, s))
+        C = g.input("C", "il", (s, t))
+        D = g.input("D", "lm", (t, u))
+        E = g.input("E", "mk", (u, s))
+    else:
+        A = g.input("A", "ij", (s, s))
+        B = g.input("B", "jk", (s, s))
+        C = g.input("C", "il", (s, s))
+        D = g.input("D", "lm", (s, s))
+        E = g.input("E", "mk", (s, s))
+    AB = g.einsum("ij,jk->ik", A, B, name="AB")
+    DE = g.einsum("lm,mk->lk", D, E, name="DE")
+    CDE = g.einsum("il,lk->ik", C, DE, name="CDE")
+    g.einsum("ik,ik->ik", AB, CDE, combine="add", agg="", name="sum")
+    return g
+
+
+def run(p: int = 16, sizes=(256, 1024, 4096, 16384)) -> list[tuple]:
+    rows = []
+    for skewed in (False, True):
+        regime = "skewed" if skewed else "uniform"
+        for s in sizes:
+            g = chain_graph(s, skewed)
+            t0 = time.time()
+            ein = eindecomp(g, p, offpath_repart=True)
+            t_plan = (time.time() - t0) * 1e6
+            sq = plan_sqrt(g, p)
+            ratio = sq.cost / max(ein.cost, 1)
+            rows.append((f"exp1_{regime}_s{s}_eindecomp_cost", ein.cost, ""))
+            rows.append((f"exp1_{regime}_s{s}_sqrt_cost", sq.cost,
+                         f"sqrt/eindecomp={ratio:.2f}x"))
+            rows.append((f"exp1_{regime}_s{s}_plan_time", t_plan, "us"))
+    return rows
+
+
+def run_wallclock(p: int = 8, s: int = 512) -> list[tuple]:
+    """Execute both plans through the TRA reference runtime and time them
+    (CPU; the paper's CPU cluster analogue at container scale)."""
+    from repro.core.tra import execute_graph_tra
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for skewed in (False, True):
+        regime = "skewed" if skewed else "uniform"
+        g = chain_graph(s, skewed)
+        feeds = {n.nid: rng.normal(size=n.shape).astype(np.float32)
+                 for n in g.nodes if n.kind == "input"}
+        for name, plan in (("eindecomp", eindecomp(g, p, offpath_repart=True)),
+                           ("sqrt", plan_sqrt(g, p))):
+            t0 = time.time()
+            vals, stats = execute_graph_tra(g, plan.d_by_node, feeds)
+            dt = (time.time() - t0) * 1e6
+            rows.append((f"exp1_wall_{regime}_{name}", dt,
+                         f"kernel_calls={stats['kernel_calls']}"))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Experiment 4 analogue (Fig 11): memory-constrained LLM inference.
+
+ZeRO-Inference / FlexGen are GPU-RAM-paging PyTorch systems and cannot run
+here; the transferable question is *per-device memory of the decomposed
+computation vs sequence length* — the artifact a paging engine like TURNIP
+would consume.  A child process (fresh jax, 8 forced host devices) lowers a
+reduced llama prefill under (a) the EinDecomp plan and (b) forced
+data-parallel, and reports ``memory_analysis`` per device: the automatic
+plan keeps the footprint far below DP as the context grows (the paper's
+OOM-avoidance story, Fig 11's x-axis).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def run() -> list[tuple]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks._memory_child"],
+        capture_output=True, text=True, env=env, timeout=520)
+    if proc.returncode != 0:
+        raise RuntimeError(f"memory child failed:\n{proc.stderr[-2000:]}")
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("MEMROW "):
+            _, name, mb = line.split()
+            rows.append((name, float(mb), "MB/device"))
+    return rows

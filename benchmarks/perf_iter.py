@@ -1,0 +1,148 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver.
+
+Runs one (arch x shape) cell under a series of named policy/plan variants,
+re-lowers, re-derives the three roofline terms, and prints a comparison —
+the measurement half of the hypothesis -> change -> measure loop.  Each
+variant writes a tagged JSON artifact so EXPERIMENTS.md can cite it.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch llama-7b \
+      --shape train_4k --variants baseline,collective,megatron_fsdp
+"""
+import argparse
+import json
+
+import jax
+
+
+def variant_policy(name: str, cfg, shape, mesh):
+    """Returns (policy or None, fsdp flag, description)."""
+    from repro.launch.mesh import mesh_axes_dict
+    from repro.models.eingraphs import plan_for
+    from repro.models.policy import manual_policy, policy_from_plan
+
+    axes = mesh_axes_dict(mesh)
+    train = shape.kind == "train"
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in axes) if train else ()
+
+    if name == "baseline":
+        # paper-faithful EinDecomp plan (§7 objective) + fsdp storage
+        return None, None, "EinDecomp (paper §7 cost) plan"
+    if name == "paper_lin":
+        g, plan, policy = plan_for(cfg, shape, axes, fsdp=train,
+                                   offpath_repart=False)
+        return policy, train, "paper-faithful §8.4 linearization"
+    if name == "collective":
+        from repro.core.decomp import eindecomp
+        from repro.models.eingraphs import build_graph
+
+        g = build_graph(cfg, shape)
+        p = 1
+        for v in axes.values():
+            p *= v
+        plan = eindecomp(g, p, mesh_axes=axes, offpath_repart=True,
+                         cost_mode="collective")
+        policy = policy_from_plan(plan, g, fsdp_axes=fsdp_axes)
+        return policy, train, "EinDecomp with torus-collective cost mode"
+    if name == "megatron_fsdp":
+        pol = manual_policy(
+            {"b": "data", "h": "model", "k": "model", "f": "model",
+             "v": "model", "e": "model", "c": "data", "t": "model"},
+            fsdp_axes=fsdp_axes)
+        return pol, train, "manual Megatron TP x DP (+fsdp on train)"
+    if name == "megatron_seq":
+        pol = manual_policy(
+            {"b": "data", "h": "model", "k": "model", "f": "model",
+             "v": "model", "s": "model", "t": "model"},
+            fsdp_axes=fsdp_axes)
+        return pol, train, "Megatron TP + sequence parallelism"
+    if name == "no_remat":
+        from repro.models.eingraphs import plan_for as pf
+
+        _, _, policy = pf(cfg, shape, axes, fsdp=train)
+        policy.remat = False
+        return policy, train, "EinDecomp plan, remat disabled"
+    if name == "fsdp_both":
+        from repro.models.eingraphs import plan_for as pf
+
+        _, _, policy = pf(cfg, shape, axes, fsdp=train)
+        policy.fsdp_axes = tuple(axes)  # ZeRO-3 over the whole mesh
+        return policy, train, "EinDecomp plan, params+opt sharded over all axes"
+    if name == "remat_dots":
+        from repro.models.eingraphs import plan_for as pf
+
+        _, _, policy = pf(cfg, shape, axes, fsdp=train)
+        policy.remat = "dots"
+        return policy, train, "EinDecomp plan, dots-saveable selective remat"
+    if name == "fsdp_both_dots":
+        from repro.models.eingraphs import plan_for as pf
+
+        _, _, policy = pf(cfg, shape, axes, fsdp=train)
+        policy.fsdp_axes = tuple(axes)
+        policy.remat = "dots"
+        return policy, train, "ZeRO-3 over mesh + dots-saveable remat"
+    if name == "no_fsdp":
+        from repro.models.eingraphs import plan_for as pf
+
+        _, _, policy = pf(cfg, shape, axes, fsdp=False)
+        return policy, False, "EinDecomp plan, params replicated over data"
+    raise ValueError(name)
+
+
+def run_variant(arch: str, shape_name: str, variant: str,
+                out_dir: str = "artifacts/perf") -> dict:
+    import dataclasses
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    cfg_override = None
+    if variant.startswith("moe_local"):
+        cfg_override = dataclasses.replace(cfg, moe_groups=16)
+        base = variant[len("moe_local"):].lstrip("_") or "baseline"
+        variant_inner = base
+    else:
+        variant_inner = variant
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    policy, fsdp, desc = variant_policy(variant_inner,
+                                        cfg_override or cfg, shape, mesh)
+    if cfg_override is not None:
+        desc = "group-local MoE dispatch (G=16) + " + desc
+    rec = run_cell(arch, shape_name, fsdp=fsdp, policy_override=policy,
+                   out_dir=out_dir, tag=variant, cfg_override=cfg_override)
+    rec["variant"] = variant
+    rec["description"] = desc
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    args = ap.parse_args()
+
+    print(f"{'variant':16s} {'GB/dev':>8s} {'t_compute':>10s} {'t_memory':>10s}"
+          f" {'t_coll':>10s} {'bound':>10s} {'frac':>5s}")
+    for v in args.variants.split(","):
+        try:
+            rec = run_variant(args.arch, args.shape, v)
+            r = rec["roofline"]
+            print(f"{v:16s} {rec['memory']['per_device_gb']:8.2f} "
+                  f"{r['t_compute_s']:10.3e} {r['t_memory_s']:10.3e} "
+                  f"{r['t_collective_s']:10.3e} {rec['bottleneck']:>10s} "
+                  f"{rec['roofline_fraction']:5.2f}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{v:16s} FAILED: {type(e).__name__}: {e}", flush=True)
+        finally:
+            jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Inject the dry-run roofline tables into EXPERIMENTS.md placeholders."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def table(mesh_filter: str, tag: str = "") -> str:
+    lines = [
+        "| arch | shape | GB/dev | fits 16GB | t_compute | t_memory(ub) |"
+        " t_mem(lb) | t_coll | bound(ub) | bound(lb) | frac(ub) | frac(lb) |"
+        " useful |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    recs = []
+    for fn in sorted(glob.glob("artifacts/dryrun/*.json")):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("mesh") != mesh_filter or r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in recs:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — |"
+                         f" — | *skipped: full attention* | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("per_device_gb", float("nan"))
+        fits = "yes" if r.get("fits_16gb") else "**no**"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.2f} | {fits} |"
+            f" {rl['t_compute_s']:.2e} | {rl['t_memory_s']:.2e} |"
+            f" {rl.get('t_memory_lb_s', 0):.2e} |"
+            f" {rl['t_collective_s']:.2e} | {r['bottleneck']} |"
+            f" {r.get('bottleneck_lb', '—')} |"
+            f" {r['roofline_fraction']:.2f} |"
+            f" {r.get('roofline_fraction_lb', 0):.2f} |"
+            f" {rl['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    text = text.replace("<!-- SINGLE_POD_TABLE -->", table("16x16"))
+    text = text.replace("<!-- MULTI_POD_TABLE -->", table("2x16x16"))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Roofline table builder: reads artifacts/dryrun/*.json (written by
+``python -m repro.launch.dryrun``) and renders the EXPERIMENTS.md §Roofline
+markdown table plus CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(out_dir: str = "artifacts/dryrun") -> list[tuple]:
+    out = []
+    for r in load(out_dir):
+        if not r.get("ok"):
+            continue
+        key = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("tag"):
+            key += f"_{r['tag']}"
+        rl = r["roofline"]
+        out.append((key + "_t_compute_s", rl["t_compute_s"],
+                    r["bottleneck"]))
+        out.append((key + "_t_memory_s", rl["t_memory_s"], ""))
+        out.append((key + "_t_collective_s", rl["t_collective_s"], ""))
+        out.append((key + "_frac", r["roofline_fraction"],
+                    f"useful={rl['useful_flops_ratio']:.2f}"))
+    return out
+
+
+def markdown_table(out_dir: str = "artifacts/dryrun",
+                   tag: str = "") -> str:
+    lines = [
+        "| arch | shape | mesh | GB/dev | t_compute | t_memory | t_coll |"
+        " bound | roofline frac | useful FLOPs |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(out_dir):
+        if r.get("tag", "") != tag:
+            continue
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — |"
+                f" — | *skipped: full attention* | — | — |")
+            continue
+        if not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("per_device_gb", float("nan"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {mem:.2f} |"
+            f" {rl['t_compute_s']:.3e} | {rl['t_memory_s']:.3e} |"
+            f" {rl['t_collective_s']:.3e} | {r['bottleneck']} |"
+            f" {r['roofline_fraction']:.2f} |"
+            f" {rl['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

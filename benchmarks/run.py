@@ -1,0 +1,52 @@
+"""Benchmark orchestrator: one function per paper table/figure.
+Prints ``name,value,derived`` CSV (value is cost-model floats for plan
+comparisons, microseconds for wall-clock rows, MB for memory rows)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    t0 = time.time()
+    sections = []
+
+    from benchmarks import (bench_ffnn, bench_llama_decomp, bench_matrix_chain,
+                            bench_memory, roofline)
+
+    sections.append(("Experiment 1: matrix chain (Figs 7-8)",
+                     lambda: bench_matrix_chain.run()))
+    sections.append(("Experiment 1: wall-clock (TRA runtime)",
+                     lambda: bench_matrix_chain.run_wallclock()))
+    sections.append(("Experiment 2: FFNN training (Fig 9)",
+                     lambda: bench_ffnn.run()))
+    sections.append(("Experiment 2: wall-clock training",
+                     lambda: bench_ffnn.run_training_wallclock()))
+    sections.append(("Experiment 3: LLaMA FTinf decompositions (Fig 10)",
+                     lambda: bench_llama_decomp.run()))
+    sections.append(("Experiment 3: wall-clock prefill",
+                     lambda: bench_llama_decomp.run_wallclock()))
+    sections.append(("Experiment 4: memory-constrained inference (Fig 11)",
+                     lambda: bench_memory.run()))
+    sections.append(("Roofline (from dry-run artifacts)",
+                     lambda: roofline.rows()))
+
+    failures = 0
+    print("name,value,derived")
+    for title, fn in sections:
+        print(f"# {title}", flush=True)
+        try:
+            for name, value, derived in fn():
+                print(f"{name},{value:.6g},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print(f"# done in {time.time() - t0:.1f}s, {failures} section failures",
+          flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end training driver: train a small LM for a few hundred steps on
+the synthetic pipeline, with EinDecomp-planned sharding, checkpointing and
+restart.  The loss must visibly drop (the synthetic stream has learnable
+motif structure).
+
+Default scale (~10M params, CPU-friendly).  On a real pod, swap --arch for
+any assigned architecture and point the mesh at the pod:
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+  PYTHONPATH=src python examples/train_lm.py --arch yi-9b --reduced --steps 50
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ModelConfig, ShapeConfig, register
+from repro.launch.train import train
+
+LM10M = ModelConfig(
+    name="lm-10m", family="dense",
+    n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=1024, vocab=2048,
+    act="silu", gated_ffn=True, dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm-10m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    if args.arch == "lm-10m":
+        cfg = LM10M
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = reduced(cfg)
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    shape = ShapeConfig("train_cli", "train", args.seq, args.batch)
+    out = train(cfg, shape, steps_total=args.steps, ckpt_dir=args.ckpt,
+                ckpt_every=max(args.steps // 4, 1))
+    hist = out["history"]
+    first, last = hist[0][1], hist[-1][1]
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'DROPPED' if last < first else 'no drop — investigate'})")
+    assert last < first
+
+
+if __name__ == "__main__":
+    main()

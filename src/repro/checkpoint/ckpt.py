@@ -1,0 +1,129 @@
+"""Sharded checkpointing with async save and elastic (resharding) restore.
+
+Format: one directory per step with
+  manifest.json   — step, flattened tree structure, per-leaf shape/dtype,
+                    the mesh shape + plan the run used
+  <leaf_id>.npy   — one file per pytree leaf (addressable data gathered per
+                    host; single-process here, so the full array)
+
+Restore accepts a *different* mesh/policy than the one saved: arrays are
+re-placed with jax.device_put under the new shardings (elastic restart —
+EinDecomp then replans for the new p; DESIGN.md §7).
+
+Async: ``CheckpointManager.save`` snapshots the arrays to host memory
+synchronously (cheap) and writes files on a background thread, so the train
+step is never blocked on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = [f"leaf{idx:05d}" for idx in range(len(leaves))]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(path: str, step: int, tree: Any, *, extra: dict | None = None
+                    ) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, names, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for leaf, name in zip(leaves, names):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if logical not in ("float64", "float32", "float16", "int64", "int32",
+                           "int16", "int8", "uint8", "uint32", "uint64",
+                           "bool"):
+            arr = arr.astype(np.float32)  # bf16 etc: widen losslessly
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"].append(
+            {"name": name, "shape": list(arr.shape), "dtype": logical})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_checkpoint(path: str, like: Any, *, shardings: Any = None
+                    ) -> tuple[int, Any, dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, names, treedef = _flatten_with_paths(like)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    out = []
+    for name, shd in zip(names, shard_leaves):
+        arr = np.load(os.path.join(path, name + ".npy"))
+        arr = jax.numpy.asarray(arr, dtype=dtypes.get(name, arr.dtype))
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))  # reshard for the new mesh
+        else:
+            out.append(arr)
+    return manifest["step"], jax.tree.unflatten(treedef, out), manifest["extra"]
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints under ``root``; async writes."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def latest(self) -> str | None:
+        steps = self.all_steps()
+        return self._dir(steps[-1]) if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        # snapshot to host memory now; write on a background thread
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self._dir(step), step, host, extra=extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def restore_latest(self, like: Any, *, shardings: Any = None):
+        path = self.latest()
+        if path is None:
+            return None
+        return load_checkpoint(path, like, shardings=shardings)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)

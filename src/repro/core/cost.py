@@ -1,0 +1,170 @@
+"""Communication-cost model for a decomposition (paper §7).
+
+All costs are *upper bounds on floating-point numbers transferred*, exactly
+as in the paper: every input to a dataflow node is assumed to be moved to
+the processor where it is used.  All decompositions of a node have identical
+FLOP counts, so comparing transfer volume is sufficient (§7).
+
+Three cost terms per EinSum node:
+
+  cost_join   — moving sub-tensors to the p join sites.
+  cost_agg    — moving joined sub-tensors to their aggregation sites.
+  cost_repart — re-slicing a producer's output relation into the
+                partitioning the consumer requires.
+
+The paper's §7 worked examples are reproduced in tests/test_cost.py.
+(One known erratum: the paper's join example prints "8 x (16+16)" while its
+own figures count 16 kernel calls for d=[4,1,1,4]; the *formula* is
+p x (n_X + n_Y) with p = N(lX,lY,d) join results, which we implement.)
+
+A second, *beyond-paper* cost mode ("collective") prices repartitions and
+aggregations at torus-collective cost instead of point-to-point upper
+bounds: all-gather / reduce-scatter at ring cost (k-1)/k * bytes, all-to-all
+at bytes/k.  See DESIGN.md §2 (second adaptation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.core.einsum import EinSpec
+from repro.core.tra import ld_concat, project
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+def n_join_results(lx: Sequence[str], ly: Sequence[str], d_by_label: dict[str, int]) -> int:
+    """N(lX, lY, d) (§6): number of tuple pairs matched by the join =
+    product of d over the *unique* labels of the two inputs."""
+    return _prod(d_by_label[l] for l in ld_concat(lx, ly))
+
+
+def sub_numel(bounds: dict[str, int], d: dict[str, int], labels: Sequence[str]) -> int:
+    """Floats per sub-tensor of a tensor with the given labels: prod(b/d)."""
+    return _prod(bounds[l] // d[l] for l in labels)
+
+
+# ---------------------------------------------------------------------------
+# §7 cost terms.  All take d as a {label: parts} map plus {label: bound}.
+# ---------------------------------------------------------------------------
+
+
+def cost_join(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """p * (n_X + n_Y): each of the p join sites receives one sub-tensor
+    from each side.  Unary nodes move nothing (map runs in place)."""
+    if len(spec.in_labels) == 1:
+        return 0
+    lx, ly = spec.in_labels
+    p = n_join_results(lx, ly, d)
+    nx = sub_numel(bounds, d, lx)
+    ny = sub_numel(bounds, d, ly)
+    return p * (nx + ny)
+
+
+def cost_agg(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """(p / n_agg) * (n_agg - 1) * n_Z: per aggregation group, all but one
+    of the n_agg sub-tensors must move to the aggregation site."""
+    if not spec.agg_labels:
+        return 0
+    if len(spec.in_labels) == 2:
+        lx, ly = spec.in_labels
+        p = n_join_results(lx, ly, d)
+    else:
+        p = _prod(d[l] for l in spec.in_labels[0])
+    n_agg = _prod(d[l] for l in spec.agg_labels)
+    if n_agg == 1:
+        return 0
+    n_z = sub_numel(bounds, d, spec.out_labels)
+    return (p // n_agg) * (n_agg - 1) * n_z
+
+
+def cost_repart(
+    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
+) -> int:
+    """§7 re-partitioning upper bound, from the producer's partitioning
+    ``d_from`` to the consumer's required ``d_to`` over a tensor ``bound``.
+
+    n_p   floats per producer sub-tensor        = prod(bound / d_from)
+    n_c   floats per consumer sub-tensor        = prod(bound / d_to)
+    n_int floats a producer block contributes
+          to one consumer block                 = prod(min of block shapes)
+    n     floats in the whole tensor            = prod(bound)
+
+    cost = (n_c/n_int - 1) * (n/n_c) * (n_c + n_p)
+           [+ n_p * (n/n_c) if n_p != n_int]
+    """
+    d_from = tuple(int(x) for x in d_from)
+    d_to = tuple(int(x) for x in d_to)
+    if d_from == d_to:
+        return 0
+    bp = [b // df for b, df in zip(bound, d_from)]   # producer block shape
+    bc = [b // dt for b, dt in zip(bound, d_to)]     # consumer block shape
+    n_p = _prod(bp)
+    n_c = _prod(bc)
+    n_int = _prod(min(a, b) for a, b in zip(bp, bc))
+    n = _prod(bound)
+    cost = (n_c // n_int - 1) * (n // n_c) * (n_c + n_p)
+    if n_p != n_int:
+        cost += n_p * (n // n_c)
+    return cost
+
+
+def node_cost(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """cost_join + cost_agg for executing one node under d (repartition of
+    the *inputs* into this d is charged separately by the DP)."""
+    return cost_join(spec, d, bounds) + cost_agg(spec, d, bounds)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: collective-aware cost mode (DESIGN.md §2, adaptation 2).
+#
+# On a torus, a repartition is not p2p block shuffling, it lowers to one of:
+#   * all-gather   (un-splitting a dimension):    (k-1)/k * n   per device row
+#   * all-to-all   (moving split between dims):   ~ n / k
+#   * reduce-scatter (during aggregation):        (k-1)/k * n
+# We price the aggregated tensor movement accordingly.  This changes the
+# *relative* cost of plans that re-shard between ops vs plans that aggregate,
+# and is measured as a §Perf iteration, never silently substituted.
+# ---------------------------------------------------------------------------
+
+
+def cost_repart_collective(
+    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
+) -> int:
+    d_from = tuple(int(x) for x in d_from)
+    d_to = tuple(int(x) for x in d_to)
+    if d_from == d_to:
+        return 0
+    n = _prod(bound)
+    cost = 0
+    for df, dt in zip(d_from, d_to):
+        if df == dt:
+            continue
+        if df > dt:
+            k = df // max(dt, 1)
+            cost += (k - 1) * n // max(k, 1)      # all-gather along this dim
+        else:
+            k = dt // max(df, 1)
+            cost += n // max(k, 1)                # scatter / all-to-all
+    return cost
+
+
+def cost_agg_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """reduce-scatter pricing: (k-1)/k of the *output* tensor per reduction
+    group, instead of the paper's (n_agg-1) full sub-tensor moves."""
+    if not spec.agg_labels:
+        return 0
+    n_agg = _prod(d[l] for l in spec.agg_labels)
+    if n_agg == 1:
+        return 0
+    out_total = _prod(bounds[l] for l in spec.out_labels)
+    return (n_agg - 1) * out_total // n_agg

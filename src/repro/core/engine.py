@@ -1,0 +1,223 @@
+"""Execute an EinGraph with JAX, optionally under an EinDecomp plan.
+
+This is the production counterpart of the TRA reference runtime
+(core/tra.py): instead of physically pushing keyed sub-tensors through
+join/agg/repartition operators, each node lowers to the corresponding jnp
+op and the plan is applied as ``jax.lax.with_sharding_constraint`` on node
+outputs.  GSPMD then materializes exactly the TRA dataflow — the join is the
+per-device block computation, the aggregation is an all-reduce /
+reduce-scatter over the mesh axes assigned to the contracted labels, and
+repartitions appear as all-gather / all-to-all between nodes (DESIGN.md §2).
+
+The engine is differentiable: ``jax.grad`` through ``run`` gives training
+gradients (used by the FFNN experiment and the LM examples).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.einsum import EinGraph, EinSpec, Node
+
+# ---------------------------------------------------------------------------
+# Per-node lowering
+# ---------------------------------------------------------------------------
+
+_COMBINE2_J = {
+    "mul": lambda x, y: x * y,
+    "add": lambda x, y: x + y,
+    "sub": lambda x, y: x - y,
+    "div": lambda x, y: x / y,
+    "sqdiff": lambda x, y: (x - y) ** 2,
+    "absdiff": lambda x, y: jnp.abs(x - y),
+    "maximum": jnp.maximum,
+    "expsub": lambda x, y: jnp.exp(x - y),
+}
+
+_COMBINE1_J = {
+    "id": lambda x: x,
+    "exp": jnp.exp,
+    "neg": lambda x: -x,
+    "abs": jnp.abs,
+    "square": lambda x: x * x,
+}
+
+_AGG_J = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min, "prod": jnp.prod}
+
+
+def lower_einsum(spec: EinSpec, *args):
+    """One EinSum node -> jnp.  Contractions go straight to jnp.einsum (XLA
+    dot_general -> MXU); general (⊗,⊕) nodes lower to broadcast + reduce."""
+    if spec.is_contraction and len(spec.in_labels) == 2:
+        return jnp.einsum(spec.einsum_str(), *args)
+    if spec.is_contraction and len(spec.in_labels) == 1 and spec.combine == "id":
+        return jnp.einsum(spec.einsum_str(), *args)
+
+    all_labels = spec.all_labels
+
+    def lift(arr, labels):
+        perm_src = list(labels)
+        for l in all_labels:
+            if l not in perm_src:
+                arr = arr[..., None]
+                perm_src.append(l)
+        return jnp.transpose(arr, [perm_src.index(l) for l in all_labels])
+
+    lifted = [lift(a, ls) for a, ls in zip(args, spec.in_labels)]
+    if len(lifted) == 2:
+        joined = _COMBINE2_J[spec.combine](*lifted)
+    else:
+        joined = _COMBINE1_J[spec.combine](lifted[0])
+    if spec.agg and spec.agg_labels:
+        axes = tuple(i for i, l in enumerate(all_labels) if l in spec.agg_labels)
+        joined = _AGG_J[spec.agg](joined, axis=axes)
+    kept = [l for l in all_labels if l not in spec.agg_labels]
+    return jnp.transpose(joined, [kept.index(l) for l in spec.out_labels])
+
+
+# ---------------------------------------------------------------------------
+# map / opaque registries (shared with the dense numpy oracle, which calls
+# them with numpy arrays — all fns must be backend-polymorphic via jnp).
+# ---------------------------------------------------------------------------
+
+
+def _softmax(x, axis=-1):
+    x = jnp.asarray(x)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def _rsqrt_eps(x, eps=1e-6):
+    return jax.lax.rsqrt(jnp.asarray(x) + eps)
+
+
+MAP_FNS: dict[str, Callable] = {
+    "id": lambda x: jnp.asarray(x),
+    "exp": lambda x: jnp.exp(jnp.asarray(x)),
+    "neg": lambda x: -jnp.asarray(x),
+    "relu": lambda x: jnp.maximum(jnp.asarray(x), 0),
+    "relu2": lambda x: jnp.square(jnp.maximum(jnp.asarray(x), 0)),
+    "silu": lambda x: jax.nn.silu(jnp.asarray(x)),
+    "gelu": lambda x: jax.nn.gelu(jnp.asarray(x)),
+    "scale": lambda x, c=1.0: jnp.asarray(x) * c,
+    "add_const": lambda x, c=0.0: jnp.asarray(x) + c,
+    "rsqrt_eps": _rsqrt_eps,
+    "softmax_last": lambda x: _softmax(x, axis=-1),
+    "sigmoid": lambda x: jax.nn.sigmoid(jnp.asarray(x)),
+    "tanh": lambda x: jnp.tanh(jnp.asarray(x)),
+    "square": lambda x: jnp.square(jnp.asarray(x)),
+    "cast_f32": lambda x: jnp.asarray(x, jnp.float32),
+}
+
+
+def _op_flash_attention(q, k, v, causal=True, window=0, scale=None):
+    """Reference attention for the opaque node (b h s d layout).  The Pallas
+    kernel (kernels/flash_attention.py) replaces this on TPU."""
+    from repro.kernels import ops
+
+    return ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                               causal=causal, window=window, scale=scale)
+
+
+def _op_gather_rows(table, ids):
+    return jnp.take(jnp.asarray(table), jnp.asarray(ids).astype(jnp.int32), axis=0)
+
+
+OPAQUE_FNS: dict[str, Callable] = {
+    "flash_attention": _op_flash_attention,
+    "gather_rows": _op_gather_rows,
+}
+
+
+def register_opaque(name: str, fn: Callable) -> None:
+    OPAQUE_FNS[name] = fn
+
+
+# ---------------------------------------------------------------------------
+# Plan -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+
+def spec_for_node(node: Node, axes_by_label: dict[str, tuple[str, ...]]) -> P:
+    """PartitionSpec for a node's output from its label->mesh-axes map."""
+    entries = []
+    for l in node.labels:
+        ax = axes_by_label.get(l, ())
+        if not ax:
+            entries.append(None)
+        elif len(ax) == 1:
+            entries.append(ax[0])
+        else:
+            entries.append(tuple(ax))
+    # trailing Nones can be dropped but keep explicit for clarity
+    return P(*entries)
+
+
+def plan_shardings(g: EinGraph, plan, mesh: Mesh) -> dict[int, NamedSharding]:
+    """NamedSharding per node output for a mesh-mode plan."""
+    out = {}
+    for n in g.nodes:
+        ax = plan.axes_by_node.get(n.nid, {})
+        out[n.nid] = NamedSharding(mesh, spec_for_node(n, ax))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Graph execution
+# ---------------------------------------------------------------------------
+
+
+def run(
+    g: EinGraph,
+    feeds: dict[int, Any],
+    *,
+    plan=None,
+    mesh: Mesh | None = None,
+    constrain: bool = True,
+) -> dict[int, jnp.ndarray]:
+    """Evaluate the graph with jnp.  If a mesh-mode plan is given, each node
+    output gets a ``with_sharding_constraint`` so GSPMD realizes the
+    EinDecomp decomposition."""
+    specs = None
+    if plan is not None and mesh is not None and plan.axes_by_node:
+        specs = {nid: NamedSharding(
+            mesh, spec_for_node(g.nodes[nid], plan.axes_by_node.get(nid, {})))
+            for nid in range(len(g.nodes))}
+
+    vals: dict[int, jnp.ndarray] = {}
+    for nid in g.topo_order():
+        n = g.nodes[nid]
+        if n.kind == "input":
+            v = jnp.asarray(feeds[nid])
+        elif n.kind == "einsum":
+            v = lower_einsum(n.spec, *[vals[a] for a in n.inputs])
+        elif n.kind == "map":
+            v = MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
+        else:
+            v = OPAQUE_FNS[n.op](*[vals[a] for a in n.inputs], **n.params)
+        if specs is not None and constrain and nid in specs:
+            v = jax.lax.with_sharding_constraint(v, specs[nid])
+        vals[nid] = v
+    return vals
+
+
+def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
+                plan=None, mesh: Mesh | None = None) -> Callable:
+    """Build a jit-able ``f(feed_list) -> outputs`` for the graph.  Feeds are
+    passed positionally in input-node order (differentiable wrt any of them)."""
+    in_ids = g.input_ids()
+    out_ids = list(out_ids) if out_ids is not None else g.outputs()
+
+    def f(*arrays):
+        feeds = dict(zip(in_ids, arrays))
+        vals = run(g, feeds, plan=plan, mesh=mesh)
+        outs = tuple(vals[o] for o in out_ids)
+        return outs[0] if len(outs) == 1 else outs
+
+    return f

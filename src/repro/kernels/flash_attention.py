@@ -1,0 +1,151 @@
+"""FlashAttention for TPU in Pallas (the paper's attention hot-spot,
+re-thought for the TPU memory hierarchy — DESIGN.md §2, adaptation 3).
+
+Online-softmax attention with explicit VMEM tiling:
+
+* grid = (batch, q_heads, q_blocks, kv_blocks); the kv axis is the innermost
+  "arbitrary" (sequential) dimension so the output block is revisited and
+  the running (m, l, acc) state lives in VMEM scratch.
+* Q/K/V/O blocks are (1, 1, blk, d) slices; the kv-head index_map divides by
+  the GQA group size so grouped-query attention reads each KV block once
+  per query-head group member without materializing repeats in HBM.
+* causal / sliding-window blocks that are fully masked are skipped via
+  ``pl.when`` (no MXU work, no VMEM traffic for the P·V matmul).
+* block sizes default to (128, 128) — MXU-aligned (multiples of 128 in the
+  contracting and lane dims) and small enough that the working set
+  q(128·d) + k,v(128·d each) + acc(128·d) fits VMEM for d ≤ 256.
+
+Numerics: scores and the running state are f32 regardless of input dtype
+(bf16 in production); the output is cast back.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # inputs
+    o_ref,                        # output
+    m_ref, l_ref, acc_ref,        # VMEM scratch (carried over kv grid dim)
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    blk_q: int,
+    blk_k: int,
+    q_offset: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * blk_q + q_offset
+    k_start = ik * blk_k
+
+    # block-level relevance: any (q, k) pair in this tile unmasked?
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + blk_q - 1
+    if window:
+        relevant = jnp.logical_and(relevant, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (blk_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (blk_k, d)
+        s = jax.lax.dot_general(                              # (blk_q, blk_k) on MXU
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        if causal or window:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            mask = jnp.ones((blk_q, blk_k), dtype=jnp.bool_)
+            if causal:
+                mask &= kpos <= qpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                  # (blk_q,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])                       # (blk_q, blk_k)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (blk_k, d)
+        pv = jax.lax.dot_general(                              # MXU
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[:, 0] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_ref[:, 0]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk, d)
+    v: jnp.ndarray,  # (b, hkv, sk, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, "GQA requires hq % hkv == 0"
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else float(scale)
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, "seq must divide block"
+    grid = (b, hq, sq // blk_q, sk // blk_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # m
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # l
+            pltpu.VMEM((blk_q, d), jnp.float32),   # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

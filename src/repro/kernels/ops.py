@@ -1,0 +1,45 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+``impl`` selects the implementation:
+  * "auto"   — Pallas (compiled) on TPU, jnp reference elsewhere.  This is
+               what the model stack calls: the dry-run on the CPU container
+               lowers the XLA reference; on a real pod the same config runs
+               the Pallas kernels.
+  * "pallas" — Pallas, interpret-mode off-TPU (used by the kernel tests).
+  * "ref"    — the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import moe_gmm as _gmm
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
+                    impl: str = "auto", blk_q: int = 128, blk_k: int = 128):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
+                             q_offset=q_offset)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset,
+        blk_q=blk_q, blk_k=blk_k, interpret=not _on_tpu())
+
+
+def matmul(x, w, *, impl: str = "auto", **blocks):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.matmul(x, w)
+    return _mm.matmul(x, w, interpret=not _on_tpu(), **blocks)
+
+
+def gmm(x, w, *, impl: str = "auto", **blocks):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.gmm(x, w)
+    return _gmm.gmm(x, w, interpret=not _on_tpu(), **blocks)

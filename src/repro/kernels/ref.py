@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the semantics; each kernel's tests sweep shapes/dtypes and
+assert_allclose against these.  They are also the lowering used for the
+CPU dry-run (the Pallas kernels are the TPU *target*; on the CPU container
+they are validated in interpret mode only — DESIGN.md §2, adaptation 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk, d)
+    v: jnp.ndarray,  # (b, hkv, sk, d)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = full; >0 = sliding window (causal)
+    scale: float | None = None,
+    q_offset: int = 0,        # absolute position of q[0] (decode steps)
+) -> jnp.ndarray:
+    """Multi-head (grouped-query) attention, numerically-safe softmax."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    qs = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    ks = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qs, ks)
+
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p / l, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(m, k) @ (k, n) in f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped (expert) matmul on capacity-padded buffers:
+    (e, c, k) @ (e, k, n) -> (e, c, n), f32 accumulation."""
+    return jnp.einsum(
+        "eck,ekn->ecn", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r * g.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,345 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture x input-shape) cell and mesh:
+
+  1. run EinDecomp on the cell's EinGraph -> ShardingPolicy,
+  2. build abstract params / optimizer / caches / batch (ShapeDtypeStruct,
+     no allocation) with shardings,
+  3. ``jax.jit(step).lower(...).compile()`` the *production* (scan-rolled)
+     step — success proves the sharding config is coherent on the mesh; its
+     ``memory_analysis`` proves (or disproves) fit,
+  4. extract roofline terms.  XLA's cost_analysis counts while bodies once
+     (verified), so FLOPs/bytes/collectives come from lowering 1-unit and
+     2-unit *unrolled* variants of the same cell and extrapolating
+     affine-in-layers:  total = c1 + (units-1) * (c2 - c1).
+     Collective bytes are wire-accurate ((k-1)/k ring terms) with while
+     trip-count multipliers (launch/hlo_analysis.py).  Inner *time* scans
+     (sLSTM / mLSTM chunk loops) are still once-counted; an analytic
+     correction is added and reported separately.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod]
+Artifacts land in artifacts/dryrun/*.json; EXPERIMENTS.md tables are built
+from them by benchmarks/roofline.py.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import parse_collectives
+
+# TPU v5e per-chip constants (the TARGET hardware; this container is CPU)
+PEAK_FLOPS = 197e12     # bf16 FLOP/s
+HBM_BW = 819e9          # bytes/s
+ICI_BW = 50e9           # bytes/s/link
+
+
+def build_cell(cfg, shape, mesh, *, fsdp: bool | None = None,
+               policy_override=None, unroll: bool = False):
+    """(step_fn, example_args_with_shardings, donate, plan, policy)."""
+    from repro.data.synthetic import batch_shardings
+    from repro.launch import steps
+    from repro.launch.mesh import mesh_axes_dict
+    from repro.models import transformer as tf
+    from repro.models.eingraphs import plan_for
+    from repro.optim import adamw_init
+
+    axes = mesh_axes_dict(mesh)
+    if fsdp is None:
+        fsdp = shape.kind == "train"
+    if policy_override is not None:
+        policy, plan = policy_override, None
+    else:
+        _, plan, policy = plan_for(cfg, shape, axes, fsdp=fsdp)
+
+    params = tf.init_params(cfg, abstract=True)
+    pshard = tf.param_shardings(cfg, policy, mesh)
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params, pshard)
+    batch = tf.input_specs(cfg, shape)
+    bshard = batch_shardings(policy, mesh, batch)
+    batch = {
+        k: (jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard[k])
+            if bshard.get(k) is not None else v)
+        for k, v in batch.items()}
+
+    if shape.kind == "train":
+        opt = adamw_init(params, abstract=True)
+        # m/v moments inherit the parameter sharding (f32)
+        opt = type(opt)(
+            opt.step,
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), opt.m, pshard),
+            jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=sh), opt.v, pshard))
+        step = steps.make_train_step(cfg, policy=policy, mesh=mesh,
+                                     unroll=unroll)
+        return step, (params, opt, batch), (0, 1), plan, policy
+    if shape.kind == "prefill":
+        step = steps.make_prefill_step(cfg, policy=policy, mesh=mesh,
+                                       unroll=unroll)
+        return step, (params, batch), (), plan, policy
+    kv_len = cfg.kv_len(shape)
+    caches = tf.init_caches(cfg, shape.batch, kv_len, abstract=True)
+    cshard = tf.cache_shardings(cfg, shape.batch, kv_len, policy, mesh)
+    caches = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        caches, cshard)
+    step = steps.make_serve_step(cfg, policy=policy, mesh=mesh, unroll=unroll)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return step, (params, batch["tokens"], caches, pos), (2,), plan, policy
+
+
+def _lower_compile(cfg, shape, mesh, *, fsdp, policy_override=None,
+                   unroll=False):
+    step, args, donate, plan, policy = build_cell(
+        cfg, shape, mesh, fsdp=fsdp, policy_override=policy_override,
+        unroll=unroll)
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    return compiled, plan, policy
+
+
+def _costs(compiled, chips) -> dict:
+    ca = compiled.cost_analysis() or {}
+    wire, by_kind, plain = parse_collectives(compiled.as_text(), chips)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_wire": wire,
+        "coll_by_kind": by_kind,
+        "coll_plain": plain,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train) / 2·N_active·tokens (fwd)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch
+
+
+def inner_scan_correction(cfg, shape) -> float:
+    """Analytic FLOPs missing because inner *time* scans (sLSTM time loop,
+    mLSTM chunk loop) are counted once by XLA cost analysis.  Returns a
+    *global* FLOP count to add.  SSM chunk-loop bodies are O(s·b·d·n) —
+    negligible vs the FFN — and are skipped (documented)."""
+    if shape.kind == "decode":
+        return 0.0  # decode takes one recurrent step: counted exactly
+    s, b = shape.seq, shape.batch
+    D = cfg.d_model
+    mult = 3.0 if shape.kind == "train" else 1.0  # bwd ~ 2x fwd
+    total = 0.0
+    for blk in cfg.blocks():
+        if blk == "slstm":
+            per_unit = s * b * 16 * D * D          # x@W(4D) + h@R(4D) per step
+            total += per_unit * (1 - 1 / max(s, 1)) * mult
+        elif blk == "mlstm":
+            L = min(256, s)
+            H = cfg.n_heads
+            dh = D // H
+            trips = s // L
+            per_chunk = b * H * (3 * 2 * L * L * dh + 2 * 2 * L * dh * dh)
+            per_unit = trips * per_chunk
+            total += per_unit * (1 - 1 / max(trips, 1)) * mult
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             fsdp: bool | None = None, policy_override=None,
+             out_dir: str = "artifacts/dryrun", tag: str = "",
+             skip_full: bool = False, cfg_override=None) -> dict:
+    from repro.configs import SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "kind": shape.kind, "tag": tag, "ok": False}
+    if not cfg.supports(shape):
+        rec["skipped"] = ("long_500k needs sub-quadratic attention; "
+                          f"{arch} is pure full-attention (DESIGN.md §4)")
+        return rec
+
+    # ---- 1. production (rolled) lower+compile: proof + memory ------------
+    t0 = time.time()
+    if not skip_full:
+        compiled, plan, policy = _lower_compile(
+            cfg, shape, mesh, fsdp=fsdp, policy_override=policy_override)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+            "per_device_gb": (ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              + ma.output_size_in_bytes
+                              - ma.alias_size_in_bytes) / 1e9,
+        }
+        rec["fits_16gb"] = rec["memory"]["per_device_gb"] <= 16.0
+        del compiled
+    else:
+        _, plan, policy = (None, *_plan_only(cfg, shape, mesh, fsdp,
+                                             policy_override))
+    rec["compile_s"] = round(time.time() - t0, 1)
+    if plan is not None:
+        rec["plan_cost_floats"] = plan.cost
+    rec["policy"] = {k: list(v) for k, v in policy.label_axes.items()}
+    rec["fsdp"] = list(policy.fsdp_axes)
+
+    # ---- 2. roofline: unrolled 1-unit / 2-unit extrapolation --------------
+    period = len(cfg.block_pattern)
+    units = cfg.n_layers // period
+    ks = [1, 2] if units >= 2 else [1]
+    costs = []
+    for k in ks:
+        cfg_k = dataclasses.replace(cfg, n_layers=k * period)
+        ck, _, _ = _lower_compile(cfg_k, shape, mesh, fsdp=fsdp,
+                                  policy_override=policy, unroll=True)
+        costs.append(_costs(ck, chips))
+        del ck
+    c1 = costs[0]
+    c2 = costs[-1]
+
+    def extra(key):
+        if len(costs) == 1:
+            return c1[key] * units
+        return c1[key] + (units - 1) * (c2[key] - c1[key])
+
+    flops_dev = extra("flops")
+    bytes_dev = extra("bytes")
+    coll_dev = extra("coll_wire")
+    coll_plain = extra("coll_plain")
+    by_kind = {}
+    for kname in set(c1["coll_by_kind"]) | set(c2["coll_by_kind"]):
+        a = c1["coll_by_kind"].get(kname, 0.0)
+        b = c2["coll_by_kind"].get(kname, 0.0)
+        by_kind[kname] = a + (units - 1) * (b - a) if len(costs) > 1 else a * units
+
+    corr = inner_scan_correction(cfg, shape) / chips
+    flops_dev += corr
+
+    mf = model_flops(cfg, shape)
+    # buffer-touch floor: every live buffer read+written once per step.
+    # XLA's bytes-accessed is a no-fusion-reuse UPPER bound; truth is in
+    # [t_memory_lb, t_memory].
+    touch = 0.0
+    if "memory" in rec:
+        touch = 2.0 * rec["memory"]["per_device_gb"] * 1e9
+    rec["roofline"] = {
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "touch_bytes_per_dev": touch,
+        "t_memory_lb_s": touch / HBM_BW,
+        "collective_wire_bytes_per_dev": coll_dev,
+        "collective_operand_bytes_per_dev": coll_plain,
+        "collective_by_kind": by_kind,
+        "inner_scan_flops_corr_per_dev": corr,
+        "t_compute_s": flops_dev / PEAK_FLOPS,
+        "t_memory_s": bytes_dev / HBM_BW,
+        "t_collective_s": coll_dev / ICI_BW,
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(flops_dev * chips, 1.0),
+    }
+    terms = {"compute": rec["roofline"]["t_compute_s"],
+             "memory": rec["roofline"]["t_memory_s"],
+             "collective": rec["roofline"]["t_collective_s"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+    rec["roofline_fraction"] = terms["compute"] / max(max(terms.values()), 1e-30)
+    terms_lb = dict(terms, memory=rec["roofline"]["t_memory_lb_s"])
+    rec["bottleneck_lb"] = max(terms_lb, key=terms_lb.get)
+    rec["roofline_fraction_lb"] = (terms_lb["compute"]
+                                   / max(max(terms_lb.values()), 1e-30))
+    rec["total_s"] = round(time.time() - t0, 1)
+    rec["ok"] = True
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _plan_only(cfg, shape, mesh, fsdp, policy_override):
+    from repro.launch.mesh import mesh_axes_dict
+    from repro.models.eingraphs import plan_for
+
+    if policy_override is not None:
+        return None, policy_override
+    if fsdp is None:
+        fsdp = shape.kind == "train"
+    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=fsdp)
+    return plan, policy
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS, SHAPES
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           out_dir=args.out, tag=args.tag)
+            if rec.get("skipped"):
+                print(f"SKIP {arch:18s} {shape:12s} {rec['skipped'][:58]}",
+                      flush=True)
+                continue
+            r = rec["roofline"]
+            print(f"OK   {arch:18s} {shape:12s} mesh={rec['mesh']:8s} "
+                  f"mem={rec['memory']['per_device_gb']:7.2f}GB "
+                  f"t_c={r['t_compute_s']:.2e} t_m={r['t_memory_s']:.2e} "
+                  f"t_x={r['t_collective_s']:.2e} {rec['bottleneck']:10s} "
+                  f"frac={rec['roofline_fraction']:.2f} "
+                  f"[{rec['total_s']}s]", flush=True)
+        except Exception:
+            failures += 1
+            print(f"FAIL {arch:18s} {shape:12s}", flush=True)
+            traceback.print_exc()
+        finally:
+            jax.clear_caches()  # keep host RAM bounded across 40 compiles
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

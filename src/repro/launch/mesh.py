@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Functions (not module constants) so importing never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / host benchmarks)."""
+    import numpy as np
+
+    n = len(jax.devices())
+    want = int(np.prod(shape))
+    if want > n:
+        shape = (1, n)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_axes_dict(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

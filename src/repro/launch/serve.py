@@ -1,0 +1,119 @@
+"""Serving driver: batched prefill + decode loop with KV/state caches.
+
+``serve`` takes a batch of prompts, prefillls them in one fused forward
+(returning per-layer caches), then decodes greedily token-by-token with the
+jitted serve_step.  Sliding-window archs keep ring-buffer caches, recurrent
+archs carry constant-size state — the 500k-token decode shape runs in O(1)
+memory per token (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh, mesh_axes_dict
+from repro.models import transformer as tf
+from repro.models.attention import KVCache
+from repro.models.eingraphs import plan_for
+
+
+def _ring_pack(cache_kv: KVCache, prompt_len: int, window: int) -> KVCache:
+    """Re-pack a prefill cache (time-ordered) into decode ring order."""
+    S = cache_kv.k.shape[2]  # (L, b, S, kh, hd) stacked per unit
+    take = min(window, prompt_len)
+    slots = (prompt_len - take + np.arange(take)) % window
+
+    def pack(x):
+        ring = jnp.zeros(x.shape[:2] + (window,) + x.shape[3:], x.dtype)
+        src = x[:, :, prompt_len - take:prompt_len]
+        return ring.at[:, :, slots].set(src)
+
+    return KVCache(pack(cache_kv.k), pack(cache_kv.v))
+
+
+def prepare_decode_caches(cfg, prefill_caches, prompt_len: int, kv_len: int):
+    """Convert prefill-collected caches into decode-ready buffers."""
+    out = []
+    for blk, cache in zip(cfg.block_pattern, prefill_caches):
+        if blk in ("attn", "hymba"):
+            kv = cache[0] if blk == "hymba" else cache
+            k, v = kv
+            if cfg.window:
+                kv2 = _ring_pack(KVCache(k, v), prompt_len, kv_len)
+            else:
+                pad = kv_len - k.shape[2]
+                k2 = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                v2 = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                kv2 = KVCache(k2, v2)
+            out.append((kv2, cache[1]) if blk == "hymba" else kv2)
+        else:
+            out.append(cache)
+    return out
+
+
+def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
+          kv_len: int | None = None, params=None, greedy: bool = True,
+          seed: int = 0):
+    """prompts: (b, prompt_len) int32.  Returns (b, max_new) generations."""
+    mesh = mesh or make_host_mesh()
+    b, prompt_len = prompts.shape
+    kv_len = kv_len or (cfg.kv_len(ShapeConfig("serve", "decode",
+                                               prompt_len + max_new, b)))
+    shape = ShapeConfig("serve", "prefill", prompt_len, b)
+    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=False)
+
+    if params is None:
+        params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    params = jax.device_put(params, tf.param_shardings(cfg, policy, mesh))
+
+    prefill = jax.jit(steps.make_prefill_step(cfg, policy=policy, mesh=mesh))
+    decode = jax.jit(steps.make_serve_step(cfg, policy=policy, mesh=mesh),
+                     donate_argnums=(2,))
+
+    t0 = time.time()
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompts)})
+    caches = prepare_decode_caches(cfg, caches, prompt_len, kv_len)
+    t_prefill = time.time() - t0
+
+    outs = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for i in range(max_new):
+        outs.append(np.asarray(tok)[:, 0])
+        logits, caches = decode(params, tok, caches, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_decode = time.time() - t0
+    gen = np.stack(outs, axis=1)
+    return gen, {"t_prefill_s": t_prefill, "t_decode_s": t_decode,
+                 "tok_per_s": b * max_new / max(t_decode, 1e-9)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    gen, stats = serve(cfg, prompts, max_new=args.max_new)
+    print("generations:\n", gen)
+    print(stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Step functions shared by the dry-run, the trainer and the server:
+``train_step`` (fwd + bwd + AdamW), ``prefill_step`` and ``serve_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.transformer import loss_fn
+from repro.optim import adamw_update
+
+
+def make_train_step(cfg, *, policy=None, mesh=None,
+                    lr_fn: Callable | None = None,
+                    weight_decay: float = 0.1, unroll: bool = False,
+                    grad_reduce_scatter: bool = True) -> Callable:
+    lr_fn = lr_fn or (lambda step: 3e-4)
+    gshard = None
+    if policy is not None and mesh is not None and grad_reduce_scatter:
+        # pin gradients to the parameter sharding right at production so
+        # GSPMD lowers the batch-axis reduction as reduce-scatter instead
+        # of all-reduce + slice (ZeRO-2; EXPERIMENTS.md §Perf)
+        gshard = tf.param_shardings(cfg, policy, mesh)
+
+    def train_step(params, opt_state, batch):
+        def _loss(p):
+            return loss_fn(p, batch, cfg, policy=policy, mesh=mesh,
+                           unroll=unroll)
+
+        (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(params)
+        if gshard is not None:
+            grads = jax.lax.with_sharding_constraint(grads, gshard)
+        lr = lr_fn(opt_state.step)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr, weight_decay=weight_decay)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm,
+                        "lr": jnp.asarray(lr, jnp.float32)})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, policy=None, mesh=None, unroll: bool = False) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches, _ = tf.forward(
+            params, batch["tokens"], cfg,
+            prefix_embeds=batch.get("prefix_embeds"),
+            policy=policy, mesh=mesh, collect_cache=True, remat=False,
+            unroll=unroll, last_logit_only=True)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, policy=None, mesh=None, unroll: bool = False) -> Callable:
+    def serve_step(params, tokens, caches, pos):
+        return tf.decode_step(params, tokens, caches, pos, cfg,
+                              policy=policy, mesh=mesh, unroll=unroll)
+
+    return serve_step

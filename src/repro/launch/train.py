@@ -1,0 +1,128 @@
+"""Training driver: real training loop with checkpoint/restart, elastic
+resharding, deterministic data replay and async checkpointing.
+
+On a real cluster each host runs this under ``jax.distributed.initialize``
+(one process per host; the mesh spans all pods).  On this container it runs
+the same code path over the local devices — ``examples/train_lm.py`` drives
+a ~100M-param model for a few hundred steps.
+
+Fault tolerance (DESIGN.md §7):
+  * checkpoints carry {params, opt_state, step} + the mesh/plan manifest;
+  * restore reshards onto whatever mesh the restarted job has (elastic) —
+    EinDecomp replans for the new device count;
+  * the data pipeline is counter-based, so step N's global batch is
+    identical across restarts regardless of host count;
+  * checkpoint writes happen on a background thread (never blocks a step).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.data.synthetic import SyntheticLM, batch_shardings
+from repro.launch import steps
+from repro.launch.mesh import make_host_mesh, mesh_axes_dict
+from repro.models import transformer as tf
+from repro.models.eingraphs import plan_for
+from repro.optim import adamw_init
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+
+
+def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
+          mesh=None, ckpt_dir: str | None = None, ckpt_every: int = 50,
+          schedule: str = "cosine", peak_lr: float = 3e-4,
+          log_every: int = 10, seed: int = 0) -> dict:
+    mesh = mesh or make_host_mesh()
+    axes = mesh_axes_dict(mesh)
+    _, plan, policy = plan_for(cfg, shape, axes, fsdp=True)
+
+    if schedule == "wsd":
+        lr_fn = lambda s: wsd_schedule(s, peak_lr=peak_lr,
+                                       warmup=max(steps_total // 10, 1),
+                                       stable=steps_total // 2,
+                                       decay=max(steps_total // 5, 1))
+    else:
+        lr_fn = lambda s: cosine_schedule(s, peak_lr=peak_lr,
+                                          warmup=max(steps_total // 10, 1),
+                                          total=steps_total)
+
+    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    pshard = tf.param_shardings(cfg, policy, mesh)
+    params = jax.device_put(params, pshard)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(
+        steps.make_train_step(cfg, policy=policy, mesh=mesh, lr_fn=lr_fn),
+        donate_argnums=(0, 1))
+
+    data = SyntheticLM(cfg.vocab, shape.seq - cfg.prefix_len, shape.batch,
+                       seed=seed)
+    bshard = batch_shardings(policy, mesh,
+                             tf.input_specs(cfg, shape))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if mgr is not None:
+        restored = mgr.restore_latest(
+            (params, opt_state),
+            shardings=(pshard, jax.tree.map(lambda s: None, opt_state)))
+        if restored is not None:
+            start, (params, opt_state), _ = restored
+            print(f"[train] restored step {start} (elastic reshard onto "
+                  f"{axes})")
+
+    history = []
+    t0 = time.time()
+    for step in range(start, steps_total):
+        hb = data.global_batch_at(step)
+        batch = {"tokens": jax.device_put(hb["tokens"], bshard["tokens"]),
+                 "labels": jax.device_put(hb["labels"], bshard["labels"])}
+        if cfg.prefix_len:
+            rng = np.random.default_rng(step)
+            pe = rng.normal(size=(shape.batch, cfg.prefix_len,
+                                  cfg.d_model)).astype(np.float32)
+            batch["prefix_embeds"] = jax.device_put(
+                pe, bshard["prefix_embeds"])
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps_total - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state))
+    if mgr is not None:
+        mgr.save(steps_total, (params, opt_state), blocking=True)
+    return {"history": history, "params": params, "opt_state": opt_state}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--schedule", default="cosine")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    train(cfg, shape, steps_total=args.steps, ckpt_dir=args.ckpt,
+          schedule=args.schedule)
+
+
+if __name__ == "__main__":
+    main()

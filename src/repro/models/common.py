@@ -1,0 +1,121 @@
+"""Shared model components: norms, RoPE, embeddings, losses, init.
+
+All parameters are plain dict pytrees; layer stacks carry a leading L axis
+for ``jax.lax.scan``.  ``abstract=True`` init returns ShapeDtypeStructs so
+the dry-run builds the full 100B+ parameter trees without allocating.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+
+class ParamFactory:
+    """Makes either real (seeded, fan-in scaled) params or abstract ones."""
+
+    def __init__(self, key: jax.Array | None, dtype, abstract: bool):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def dense(self, *shape: int, scale: float | None = None):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        self.key, sub = jax.random.split(self.key)
+        fan_in = shape[0] if len(shape) >= 2 else 1
+        s = scale if scale is not None else fan_in ** -0.5
+        return (jax.random.normal(sub, shape, jnp.float32) * s).astype(self.dtype)
+
+    def zeros(self, *shape: int):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, *shape: int):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.ones(shape, self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r).astype(x.dtype) * g
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., s, h, hd); positions: (s,) or broadcastable to x[..., :, 0, 0]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+
+def embed(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0)
+
+
+def lm_logits(x: jnp.ndarray, head: jnp.ndarray) -> jnp.ndarray:
+    """x (b, s, d) @ head (d, v) -> (b, s, v)."""
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 vocab_real: int | None = None) -> jnp.ndarray:
+    """Mean next-token cross-entropy, f32 logsumexp, padded ids masked."""
+    lf = logits.astype(jnp.float32)
+    if vocab_real is not None and vocab_real < lf.shape[-1]:
+        pad = lf.shape[-1] - vocab_real
+        mask = jnp.concatenate(
+            [jnp.zeros((vocab_real,), jnp.float32),
+             jnp.full((pad,), -1e30, jnp.float32)])
+        lf = lf + mask
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jnp.maximum(x, 0)),
+        "relu": lambda x: jnp.maximum(x, 0),
+    }[name]

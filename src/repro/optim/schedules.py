@@ -1,0 +1,26 @@
+"""LR schedules: cosine (llama-style) and WSD (warmup-stable-decay — the
+MiniCPM schedule its config asks for)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, floor_frac: float = 0.01):
+    """Warmup -> stable plateau -> short exponential-ish decay (MiniCPM)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (floor_frac ** prog)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < warmup + stable, peak_lr, dec))
+    return out

@@ -1,0 +1,64 @@
+"""Cost model (paper §7) against the paper's own worked examples."""
+import pytest
+
+from repro.core.cost import (cost_agg, cost_join, cost_repart,
+                             cost_repart_collective, n_join_results)
+from repro.core.einsum import EinSpec
+
+MM = EinSpec((("i", "j"), ("j", "k")), ("i", "k"))
+BOUNDS = {"i": 8, "j": 8, "k": 8}
+
+
+def test_join_result_count_top_left():
+    # Fig 1/2: every depicted partitioning yields 16 kernel calls
+    for d in ({"i": 4, "j": 1, "k": 4}, {"i": 2, "j": 1, "k": 8},
+              {"i": 2, "j": 4, "k": 2}, {"i": 2, "j": 2, "k": 4}):
+        assert n_join_results(["i", "j"], ["j", "k"], d) == 16
+
+
+def test_join_result_count_with_join_predicate():
+    # §6: d = [16,2,2,4] -> 16*2*4 = 128 (the repeated j counts once)
+    d = {"i": 16, "j": 2, "k": 4}
+    assert n_join_results(["i", "j"], ["j", "k"], d) == 128
+
+
+def test_cost_join_top_left():
+    # §7 worked example: b_XY/d = [2,8,8,2]; n_X = n_Y = 16.
+    # (The paper prints "8 x (16+16)" but its own figures count 16 kernel
+    # calls for d=[4,1,1,4]; the formula is p*(n_X+n_Y) with p = N(d) = 16.)
+    d = {"i": 4, "j": 1, "k": 4}
+    assert cost_join(MM, d, BOUNDS) == 16 * (16 + 16)
+
+
+def test_cost_agg_bottom_right():
+    # §7: d = [2,2,2,4]: n_agg=2, n_Z=8, cost = (16/2)(2-1)8 = 64
+    d = {"i": 2, "j": 2, "k": 4}
+    assert cost_agg(MM, d, BOUNDS) == 64
+
+
+def test_cost_agg_zero_when_join_dim_unsplit():
+    d = {"i": 4, "j": 1, "k": 4}
+    assert cost_agg(MM, d, BOUNDS) == 0
+
+
+def test_cost_repart_paper_example():
+    # §7: producer d_Z=[2,4], consumer d_X=[4,1] over bound [8,8]:
+    # n_p=8, n_c=16, n_int=4, n=64 -> (4-1)(64/16)(16+8) + 8*(64/16) = 320
+    assert cost_repart((2, 4), (4, 1), (8, 8)) == 320
+
+
+def test_cost_repart_identity():
+    assert cost_repart((2, 4), (2, 4), (8, 8)) == 0
+
+
+def test_cost_repart_symmetry_structure():
+    # repart to a refinement only moves the producer extraction term
+    c = cost_repart((1, 1), (4, 4), (16, 16))
+    assert c > 0
+
+
+def test_collective_mode_cheaper_for_allgather():
+    # un-sharding one dim: ring all-gather (k-1)/k*n vs paper's p2p bound
+    paper = cost_repart((8, 1), (1, 1), (64, 64))
+    coll = cost_repart_collective((8, 1), (1, 1), (64, 64))
+    assert coll < paper

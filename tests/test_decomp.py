@@ -1,0 +1,156 @@
+"""EinDecomp (paper §8): counting, viability, DP optimality, linearization."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.decomp import (Plan, count_partitionings, eindecomp,
+                               eindecomp_tree, input_partitionings,
+                               plan_cost, plan_data_parallel, plan_label,
+                               plan_sqrt, viable_mesh, viable_pow2)
+from repro.core.einsum import EinGraph
+
+
+def chain_graph(n=3, size=64):
+    g = EinGraph()
+    prev = g.input("A0", "ij", (size, size))
+    labels = "ijklmnop"
+    for t in range(n):
+        w = g.input(f"W{t}", labels[t + 1] + labels[t + 2], (size, size))
+        prev = g.einsum(
+            f"{labels[t]}{labels[t+1]},{labels[t+1]}{labels[t+2]}"
+            f"->{labels[t]}{labels[t+2]}", prev, w)
+    return g
+
+
+def test_counting_formula_8_1():
+    # §8.1: N=10 balls, D=6 buckets -> 3003
+    assert count_partitionings(10, 6) == 3003
+    g = EinGraph()
+    x = g.input("X", "ij", (1 << 12, 1 << 12))
+    y = g.input("Y", "jk", (1 << 12, 1 << 12))
+    z = g.einsum("ij,jk->ik", x, y)
+    for n in (3, 6, 10):
+        assert len(viable_pow2(g, z, 1 << n)) == count_partitionings(n, 3)
+
+
+def test_viable_exactly_p_kernel_calls():
+    from repro.core.cost import n_join_results
+
+    g = EinGraph()
+    x = g.input("X", "ij", (64, 64))
+    y = g.input("Y", "jk", (64, 64))
+    z = g.einsum("ij,jk->ik", x, y)
+    for d in viable_pow2(g, z, 16):
+        assert n_join_results(("i", "j"), ("j", "k"), d) == 16
+
+
+def test_viable_output_partitionings_8_2():
+    # §8.2 lists output partitionings {[2,4],[4,2],[8,1],[1,8],[2,2],[4,1],
+    # [1,4],[1,1]} for p=8 — all must be present.  (The paper's prose list
+    # is non-exhaustive: its own §8.1 formula gives C(3+3-1,2)=10
+    # partitionings, which add outputs (2,1) via d=[2,4,4,1] and (1,2).)
+    g = EinGraph()
+    x = g.input("X", "ij", (8, 8))
+    y = g.input("Y", "jk", (8, 8))
+    z = g.einsum("ij,jk->ik", x, y)
+    assert len(viable_pow2(g, z, 8)) == count_partitionings(3, 3) == 10
+    outs = {(d["i"], d["k"]) for d in viable_pow2(g, z, 8)}
+    assert outs >= {(2, 4), (4, 2), (8, 1), (1, 8), (2, 2), (4, 1), (1, 4),
+                    (1, 1)}
+
+
+def test_viable_respects_divisibility():
+    g = EinGraph()
+    x = g.input("X", "ij", (6, 64))  # i=6: only 2 divides
+    y = g.input("Y", "jk", (64, 64))
+    z = g.einsum("ij,jk->ik", x, y)
+    for d in viable_pow2(g, z, 8):
+        assert d["i"] in (1, 2)
+
+
+def test_tree_dp_beats_heuristics_on_skewed_chain():
+    # the paper's Exp 1 skew: EinDecomp adapts, SQRT does not
+    g = EinGraph()
+    a = g.input("A", "ij", (256, 32))
+    b = g.input("B", "jk", (32, 256))
+    c = g.input("C", "kl", (256, 32))
+    ab = g.einsum("ij,jk->ik", a, b)
+    abc = g.einsum("ik,kl->il", ab, c)
+    plan = eindecomp_tree(g, 16)
+    sq = plan_sqrt(g, 16)
+    assert plan.cost <= plan_cost(g, sq.d_by_node and sq)
+    assert plan.cost <= sq.cost
+
+
+def test_linearized_matches_tree_on_chains():
+    g = chain_graph(4)
+    t = eindecomp_tree(g, 16)
+    l = eindecomp(g, 16, offpath_repart=True)
+    assert l.cost == t.cost
+
+
+def test_dp_vs_bruteforce_single_node():
+    """For one matmul, the DP must find the global optimum over viable d."""
+    from repro.core.cost import node_cost
+    from repro.core.decomp import node_bounds
+
+    g = EinGraph()
+    x = g.input("X", "ij", (64, 16))
+    y = g.input("Y", "jk", (16, 256))
+    z = g.einsum("ij,jk->ik", x, y)
+    plan = eindecomp_tree(g, 16)
+    best = min(node_cost(g.nodes[z].spec, d, node_bounds(g, z))
+               for d in viable_pow2(g, z, 16))
+    assert plan.cost == best
+
+
+def test_mesh_mode_uses_all_axes():
+    g = chain_graph(2, size=64)
+    plan = eindecomp(g, 8, mesh_axes={"data": 2, "model": 4})
+    for nid, ax in plan.axes_by_node.items():
+        if g.nodes[nid].kind == "einsum":
+            used = [a for axes in ax.values() for a in axes]
+            assert sorted(used) == ["data", "model"]
+
+
+def test_mesh_mode_skips_indivisible_labels():
+    g = EinGraph()
+    x = g.input("X", "bh", (4, 25))  # h=25 not divisible by 4
+    y = g.input("Y", "ha", (25, 32))
+    z = g.einsum("bh,ha->ba", x, y)
+    plan = eindecomp(g, 8, mesh_axes={"data": 2, "model": 4})
+    d = plan.d_by_node[z]
+    assert d["h"] == 1  # model axis cannot land on h
+
+
+def test_plan_serialization_roundtrip():
+    g = chain_graph(3)
+    plan = eindecomp(g, 16, mesh_axes={"data": 4, "model": 4})
+    js = plan.to_json()
+    back = Plan.from_json(js)
+    assert back.d_by_node == plan.d_by_node
+    assert back.axes_by_node == plan.axes_by_node
+
+
+def test_offpath_repart_no_worse_than_paper_linearization():
+    """EinDecomp+ (charge cross-path reparts) should never produce a plan
+    with higher exact cost than the paper-faithful §8.4 on DAG graphs."""
+    from repro.configs import get_config, SHAPES
+    from repro.models.eingraphs import build_graph
+
+    cfg = get_config("llama-7b")
+    for shape_name in ("train_4k", "prefill_32k"):
+        g = build_graph(cfg, SHAPES[shape_name])
+        plus = eindecomp(g, 256, mesh_axes={"data": 16, "model": 16},
+                         offpath_repart=True)
+        paper = eindecomp(g, 256, mesh_axes={"data": 16, "model": 16},
+                          offpath_repart=False)
+        assert plus.cost <= paper.cost
+
+
+def test_input_partitionings_bounded_by_p():
+    opts = input_partitionings((64, 64), 16)
+    for o in opts:
+        assert o[0] * o[1] <= 16
+    assert (1, 1) in opts and (4, 4) in opts and (16, 1) in opts

@@ -1,0 +1,109 @@
+"""ShardingPolicy construction, plan->policy projection, per-arch planning,
+and small-mesh end-to-end sharded execution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced
+from repro.launch.mesh import make_host_mesh, mesh_axes_dict
+from repro.models import transformer as tf
+from repro.models.eingraphs import build_graph, plan_for
+from repro.models.policy import ShardingPolicy, manual_policy, safe_spec
+
+
+def test_safe_spec_drops_indivisible():
+    mesh = make_host_mesh((1, 1))  # axes data=1, model=1 — trivially divides
+    sp = safe_spec(P("data", "model"), (3, 5), mesh)
+    assert sp == P("data", "model")
+
+
+def test_act_spec_dedupes_axes():
+    pol = manual_policy({"b": "data", "f": "data"})
+    # both want 'data'; second occurrence must drop it
+    assert pol.act_spec("b s f") == P("data", None, None)
+
+
+def test_param_spec_fsdp_prefers_feature_dims():
+    # fsdp must land on a non-contraction dim (h free -> h; h taken -> d)
+    pol = ShardingPolicy(label_axes={}, fsdp_axes=("data",))
+    assert pol.param_spec("L a h d") == P(None, None, "data", None)
+    pol2 = ShardingPolicy(label_axes={"h": ("model",)}, fsdp_axes=("data",))
+    assert pol2.param_spec("L a h d") == P(None, None, "model", "data")
+    # only 'a' available -> falls back to 'a'
+    assert pol.param_spec("L a") == P(None, "data")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_planning_all_archs_all_shapes(arch):
+    """EinDecomp must produce a plan for every supported cell (256 chips)."""
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if not cfg.supports(shape):
+            continue
+        g, plan, policy = plan_for(cfg, shape, {"data": 16, "model": 16})
+        assert plan.cost >= 0
+        # every non-input node got a partitioning
+        for n in g.nodes:
+            assert n.nid in plan.d_by_node, (arch, shape.name, n.name)
+        # policy only references mesh axes
+        for axes in policy.label_axes.values():
+            assert set(axes) <= {"data", "model"}
+
+
+def test_planning_multi_pod():
+    cfg = get_config("mixtral-8x7b")
+    g, plan, policy = plan_for(cfg, SHAPES["train_4k"],
+                               {"pod": 2, "data": 16, "model": 16})
+    for axes in policy.label_axes.values():
+        assert set(axes) <= {"pod", "data", "model"}
+    used = {a for axes in policy.label_axes.values() for a in axes}
+    assert "pod" in used  # 512-way work exists
+
+
+def test_sharded_training_step_runs_small_mesh():
+    """End-to-end: EinDecomp policy -> shardings -> jit train step on the
+    host mesh (1 device here, but exercises the whole sharding path)."""
+    from repro.launch import steps
+    from repro.optim import adamw_init
+
+    cfg = reduced(get_config("yi-9b"))
+    mesh = make_host_mesh((1, 1))
+    _, plan, policy = plan_for(cfg, SHAPES["train_4k"],
+                               mesh_axes_dict(mesh), fsdp=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    params = jax.device_put(params, tf.param_shardings(cfg, policy, mesh))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    step = jax.jit(steps.make_train_step(cfg, policy=policy, mesh=mesh),
+                   donate_argnums=(0, 1))
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_decode_graph_has_cache_inputs():
+    cfg = get_config("yi-9b")
+    g = build_graph(cfg, SHAPES["decode_32k"])
+    names = [n.name for n in g.nodes]
+    assert "k_cache" in names and "v_cache" in names
+
+
+def test_plan_decomposes_expert_ffn_fully():
+    """MoE: the expert FFN matmuls must be decomposed into exactly p pieces
+    (expert / capacity / hidden sharding are all legitimate — mixtral's 8
+    experts cannot take a 16-way axis, so the DP picks c/f instead)."""
+    for arch in ("mixtral-8x7b", "qwen2-moe-a2.7b"):
+        cfg = get_config(arch)
+        g, plan, policy = plan_for(cfg, SHAPES["prefill_32k"],
+                                   {"data": 16, "model": 16})
+        for n in g.nodes:
+            if n.name == "expert_up":
+                d = plan.d_by_node[n.nid]
+                work = 1
+                for v in d.values():
+                    work *= v
+                assert work == 256, (arch, d)
