@@ -11,18 +11,15 @@ import jax
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import mesh_axes_dict
+from repro.launch.mesh import make_mesh, mesh_axes_dict
 from repro.models import transformer as tf
 from repro.models.eingraphs import plan_for
 from repro.models.policy import manual_policy
 
 
 def main() -> None:
-    from jax.sharding import AxisType
-
     cfg = reduced(get_config("llama-7b"))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     for seq in (512, 2048, 8192):
         shape = ShapeConfig("mem", "prefill", seq, 8)
         _, _, auto = plan_for(cfg, shape, mesh_axes_dict(mesh))

@@ -1,0 +1,120 @@
+"""Planner-latency benchmark for the canonicalization + plan cache.
+
+For every graph in the models/eingraphs.py model zoo, measures
+
+  cold  — a fresh §8 EinDecomp run (what every request paid before caching)
+  warm  — a cache hit: canonical hash + LRU lookup + label translation
+
+and *asserts*:
+
+  * the cached plan's exact §7 cost equals the freshly planned cost;
+  * a label-renamed copy of the graph is a cache **hit** (canonicalization
+    actually transfers plans across isomorphic graphs);
+  * on the llama-block graph, warm latency is >= 10x lower than cold.
+
+Run:
+  PYTHONPATH=src python benchmarks/bench_plancache.py            # full zoo
+  PYTHONPATH=src python benchmarks/bench_plancache.py --smoke    # CI subset
+
+Rows are printed as ``PLANROW <graph> cold_ms warm_ms speedup`` so CI logs
+diff cleanly across commits.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import canon
+from repro.core.decomp import eindecomp, plan_cost
+from repro.core.plancache import PlanCache
+from repro.models.eingraphs import build_graph
+
+SMOKE_ARCHS = ["llama-7b", "mixtral-8x7b", "xlstm-125m"]
+
+
+def _time(fn, reps: int = 1) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_graph(name: str, g, mesh_axes: dict[str, int]) -> dict:
+    p = math.prod(mesh_axes.values())
+
+    t_cold, fresh = _time(
+        lambda: eindecomp(g, p, mesh_axes=mesh_axes, offpath_repart=True))
+
+    cache = PlanCache()
+    eindecomp(g, p, mesh_axes=mesh_axes, offpath_repart=True, cache=cache)
+    t_warm, cached = _time(
+        lambda: eindecomp(g, p, mesh_axes=mesh_axes, offpath_repart=True,
+                          cache=cache),
+        reps=5)
+    assert cache.hits >= 5, cache.stats
+
+    # correctness: the cached plan prices identically to the fresh one
+    c_fresh, c_cached = plan_cost(g, fresh), plan_cost(g, cached)
+    assert c_cached == c_fresh, (name, c_cached, c_fresh)
+
+    # transfer: a label-renamed isomorphic copy must hit, at the same cost
+    g2 = canon.relabel_graph(g)
+    hits_before = cache.hits
+    t_ren, renamed = _time(
+        lambda: eindecomp(g2, p, mesh_axes=mesh_axes, offpath_repart=True,
+                          cache=cache))
+    assert cache.hits == hits_before + 1, f"{name}: renamed copy missed"
+    assert plan_cost(g2, renamed) == c_fresh, (name, "renamed cost drifted")
+
+    return {"name": name, "cold_ms": t_cold * 1e3, "warm_ms": t_warm * 1e3,
+            "renamed_ms": t_ren * 1e3, "cost": c_fresh,
+            "speedup": t_cold / max(t_warm, 1e-9)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: 3 archs on a 4x4 mesh")
+    ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    args = ap.parse_args()
+
+    archs = SMOKE_ARCHS if args.smoke else ["llama-7b"] + list(ARCH_IDS)
+    mesh_axes = {"data": 4, "model": 4} if args.smoke else \
+                {"data": 16, "model": 16}
+    shape = SHAPES[args.shape]
+
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        if not cfg.supports(shape):
+            continue
+        g = build_graph(cfg, shape)
+        row = bench_graph(arch, g, mesh_axes)
+        rows.append(row)
+        print(f"PLANROW {row['name']:18s} cold {row['cold_ms']:9.2f}ms  "
+              f"warm {row['warm_ms']:7.3f}ms  renamed-hit "
+              f"{row['renamed_ms']:7.3f}ms  speedup {row['speedup']:8.0f}x",
+              flush=True)
+
+    if not rows:
+        raise SystemExit(f"no arch supports shape {args.shape!r}")
+    llama = next((r for r in rows if r["name"] == "llama-7b"), None)
+    if llama is not None:
+        assert llama["speedup"] >= 10, (
+            f"warm plan must be >=10x faster than cold on llama-block, got "
+            f"{llama['speedup']:.1f}x")
+    gmean = 1.0
+    for r in rows:
+        gmean *= r["speedup"]
+    gmean **= 1.0 / len(rows)
+    print(f"\n{len(rows)} graphs, mesh {mesh_axes}: geomean warm speedup "
+          f"{gmean:.0f}x; all cached plans cost-identical to fresh; all "
+          f"renamed copies were cache hits.  [OK]")
+
+
+if __name__ == "__main__":
+    main()

@@ -323,13 +323,30 @@ def eindecomp(
     mesh_axes: dict[str, int] | None = None,
     offpath_repart: bool = False,
     cost_mode: str = "paper",
+    cache: "object | None" = None,
 ) -> Plan:
     """Run EinDecomp over a general DAG via §8.4 linearization.
 
     ``offpath_repart=True`` is the beyond-paper EinDecomp+ refinement: when an
     off-path input already has a partitioning assigned from a previous path,
     charge the true repartition cost instead of ignoring it.
+
+    ``cache`` is an optional ``core.plancache.PlanCache``.  When given, the
+    cache is consulted first under the canonical key of ``(g, p, mesh_axes,
+    cost_mode, offpath_repart)`` — a hit returns a label-translated copy of
+    the stored plan without running the DP at all — and on a miss the fresh
+    plan is inserted before returning.  The per-path DP is additionally
+    memoized on canonical path signatures (plancache.path_memo_key), so
+    isomorphic layers inside one graph plan once.
     """
+    cache_kw = dict(mesh_axes=mesh_axes, cost_mode=cost_mode,
+                    offpath_repart=offpath_repart, algo="eindecomp")
+    if cache is not None:
+        hit = cache.lookup(g, p, **cache_kw)
+        if hit is not None:
+            return hit
+        from repro.core import plancache as _pc
+
     mode = "mesh" if mesh_axes is not None else "pow2"
     cm = CostModel(cost_mode)
     plan = Plan(p=p, mode=mode)
@@ -339,8 +356,18 @@ def eindecomp(
         path = _longest_unlabeled_path(g, labeled)
         if not path:
             break
-        _optimize_path(g, path, p, plan, labeled, mesh_axes, offpath_repart,
-                       cm=cm)
+        memo_key = memo_val = None
+        if cache is not None:
+            memo_key = _pc.path_memo_key(g, path, labeled, plan, p,
+                                         mesh_axes, cost_mode, offpath_repart)
+            memo_val = cache.path_memo_get(memo_key)
+        if memo_val is not None:
+            _pc.apply_path(g, path, memo_val, plan)
+        else:
+            _optimize_path(g, path, p, plan, labeled, mesh_axes,
+                           offpath_repart, cm=cm)
+            if cache is not None:
+                cache.path_memo_put(memo_key, _pc.snapshot_path(g, path, plan))
         labeled.update(path)
 
     # inputs + map nodes inherit partitionings from consumers / producers
@@ -349,14 +376,24 @@ def eindecomp(
     # boundaries); report the exact §7 objective of the final labeling
     # (always the *paper* objective so plans are comparable across modes)
     plan.cost = plan_cost(g, plan)
+    if cache is not None:
+        cache.insert(g, p, plan, **cache_kw)
     return plan
 
 
 def eindecomp_tree(
-    g: EinGraph, p: int, *, mesh_axes: dict[str, int] | None = None
+    g: EinGraph, p: int, *, mesh_axes: dict[str, int] | None = None,
+    cache: "object | None" = None,
 ) -> Plan:
     """The exact §8.2 DP — valid when no non-input vertex has >1 consumer.
-    Used by the tests to validate the linearized version against optimal."""
+    Used by the tests to validate the linearized version against optimal.
+    ``cache`` behaves as in ``eindecomp`` (keyed separately: the tree DP's
+    reported cost is the exact DP objective, not ``plan_cost``)."""
+    cache_kw = dict(mesh_axes=mesh_axes, algo="tree")
+    if cache is not None:
+        hit = cache.lookup(g, p, **cache_kw)
+        if hit is not None:
+            return hit
     cons = g.consumers()
     for n in g.nodes:
         if n.kind != "input" and len(cons[n.nid]) > 1:
@@ -367,6 +404,8 @@ def eindecomp_tree(
                           include_all_inputs=True, cm=CostModel())
     _finalize_inputs(g, plan)
     plan.cost = cost
+    if cache is not None:
+        cache.insert(g, p, plan, **cache_kw)
     return plan
 
 
@@ -412,13 +451,8 @@ def _optimize_path(
     onpath = set(path)
     axes_choice: dict[tuple[int, tuple[int, ...]], dict] = {}
 
-    # seed graph inputs that any path node consumes
-    for nid in path:
-        for a in g.nodes[nid].inputs:
-            node_a = g.nodes[a]
-            if node_a.kind == "input" and not any(e[0] == a for e in state.M.items()):
-                for dparts in input_partitionings(node_a.shape, p):
-                    state.M[(a, dparts)] = 0.0
+    # graph inputs need no seeding: _in_table/_input_cost enumerate their
+    # pre-partitionings (§8.2, cost 0) directly wherever they are consumed
 
     for nid in path:
         n = g.nodes[nid]
@@ -559,7 +593,13 @@ def _backtrack(g, state, axes_choice, path, dz_final, plan, p, onpath,
 
 def _finalize_inputs(g: EinGraph, plan: Plan) -> None:
     """Assign input-node partitionings: what their first consumer requires.
-    Map nodes missing (single-node paths edge cases) inherit their input."""
+    Map nodes missing (single-node paths edge cases) inherit their input.
+
+    Labels are node-local, so entries are keyed by the node's *own* labels,
+    translating positionally from the consumer's (or producer's) labels —
+    the two may differ even though the graphs are semantically identical,
+    and plan entries in foreign label spaces would not survive canonical
+    translation (core/canon.py)."""
     for n in g.nodes:
         if n.nid in plan.d_by_node:
             continue
@@ -570,11 +610,14 @@ def _finalize_inputs(g: EinGraph, plan: Plan) -> None:
                 dm = plan.d_by_node[m.nid]
                 for ls_i, a in zip(_in_labels_of(m), m.inputs):
                     if a == n.nid:
-                        plan.d_by_node[n.nid] = {l: dm.get(l, 1) for l in ls_i}
+                        plan.d_by_node[n.nid] = {
+                            nl: dm.get(cl, 1)
+                            for nl, cl in zip(n.labels, ls_i)}
                         if m.nid in plan.axes_by_node:
                             am = plan.axes_by_node[m.nid]
                             plan.axes_by_node[n.nid] = {
-                                l: am[l] for l in ls_i if l in am}
+                                nl: am[cl]
+                                for nl, cl in zip(n.labels, ls_i) if cl in am}
                         break
             else:
                 plan.d_by_node[n.nid] = {l: 1 for l in n.labels}
@@ -582,9 +625,14 @@ def _finalize_inputs(g: EinGraph, plan: Plan) -> None:
             a = n.inputs[0]
             if a in plan.d_by_node:
                 src = plan.d_by_node[a]
-                plan.d_by_node[n.nid] = {l: src.get(l, 1) for l in n.labels}
+                al = g.nodes[a].labels
+                plan.d_by_node[n.nid] = {
+                    nl: src.get(sl, 1) for nl, sl in zip(n.labels, al)}
                 if a in plan.axes_by_node:
-                    plan.axes_by_node[n.nid] = dict(plan.axes_by_node[a])
+                    sax = plan.axes_by_node[a]
+                    plan.axes_by_node[n.nid] = {
+                        nl: sax[sl] for nl, sl in zip(n.labels, al)
+                        if sl in sax}
 
 
 def _in_labels_of(m: Node):

@@ -15,6 +15,7 @@ gradients (used by the FFNN experiment and the LM examples).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Callable, Sequence
 
 import jax
@@ -144,6 +145,12 @@ def register_opaque(name: str, fn: Callable) -> None:
 # ---------------------------------------------------------------------------
 
 
+def mesh_axes_dict(mesh: Mesh) -> dict[str, int]:
+    """{axis name: size} for a jax Mesh — the planner's mesh description.
+    (Re-exported by launch/mesh.py; lives here so core never imports launch.)"""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
 def spec_for_node(node: Node, axes_by_label: dict[str, tuple[str, ...]]) -> P:
     """PartitionSpec for a node's output from its label->mesh-axes map."""
     entries = []
@@ -208,9 +215,46 @@ def run(
 
 
 def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
-                plan=None, mesh: Mesh | None = None) -> Callable:
+                plan=None, mesh: Mesh | None = None, cache=None,
+                mesh_axes: dict[str, int] | None = None, p: int | None = None,
+                cost_mode: str = "paper",
+                offpath_repart: bool = True) -> Callable:
     """Build a jit-able ``f(feed_list) -> outputs`` for the graph.  Feeds are
-    passed positionally in input-node order (differentiable wrt any of them)."""
+    passed positionally in input-node order (differentiable wrt any of them).
+
+    If no ``plan`` is given but planning inputs are (``p``, ``mesh_axes``,
+    or a ``mesh`` together with a ``cache``), the runner plans the graph
+    itself — consulting ``cache`` (a ``core.plancache.PlanCache``) before
+    running the DP, so repeated runner construction for isomorphic graphs
+    pays planner latency once.  Sharding constraints only apply when a
+    ``mesh`` is given; without one, self-planning is allowed solely to warm
+    a ``cache`` (planning with neither is an error — the DP's result would
+    be discarded).  An explicit ``plan`` always takes precedence: the other
+    planning inputs (``cache``/``p``/``mesh_axes``/``cost_mode``/
+    ``offpath_repart``) are then ignored, and in particular the cache is
+    not warmed with a caller-provided plan (its planning inputs are
+    unknown, so no sound cache key exists for it)."""
+    if (plan is None and cache is not None and mesh is None
+            and p is None and mesh_axes is None):
+        raise ValueError(
+            "make_runner: cache given but nothing to plan with — pass "
+            "mesh, mesh_axes, or p")
+    if plan is None and (p is not None or mesh_axes is not None
+                         or (cache is not None and mesh is not None)):
+        from repro.core.decomp import eindecomp
+
+        if mesh is None and cache is None:
+            raise ValueError(
+                "make_runner: planning inputs (p/mesh_axes) have no effect "
+                "without a mesh to shard by or a cache to warm")
+        if mesh_axes is None and mesh is not None:
+            mesh_axes = mesh_axes_dict(mesh)
+        if p is None:
+            if not mesh_axes:
+                raise ValueError("make_runner: planning needs p or mesh/mesh_axes")
+            p = math.prod(mesh_axes.values())
+        plan = eindecomp(g, p, mesh_axes=mesh_axes, cost_mode=cost_mode,
+                         offpath_repart=offpath_repart, cache=cache)
     in_ids = g.input_ids()
     out_ids = list(out_ids) if out_ids is not None else g.outputs()
 

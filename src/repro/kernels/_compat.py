@@ -1,0 +1,5 @@
+"""Cross-version jax/pallas compat aliases shared by all kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed TPUCompilerParams -> CompilerParams across pallas releases
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

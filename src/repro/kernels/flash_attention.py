@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 NEG_INF = -1e30
 
 
@@ -145,7 +147,7 @@ def flash_attention(
             pltpu.VMEM((blk_q, 1), jnp.float32),   # l
             pltpu.VMEM((blk_q, d), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

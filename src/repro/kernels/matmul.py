@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
     ik = pl.program_id(2)
@@ -62,7 +64,7 @@ def matmul(
         out_specs=pl.BlockSpec((blk_m, blk_n), lambda im, jn, ik: (im, jn)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((blk_m, blk_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

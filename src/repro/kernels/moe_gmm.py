@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import COMPILER_PARAMS as _COMPILER_PARAMS
+
 
 def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
     ik = pl.program_id(3)
@@ -64,7 +66,7 @@ def gmm(
                                lambda ie, ic, jn, ik: (ie, ic, jn)),
         out_shape=jax.ShapeDtypeStruct((e, c, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((blk_c, blk_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

@@ -2,18 +2,32 @@
 
 Functions (not module constants) so importing never touches jax device
 state; the dry-run sets XLA_FLAGS before any jax import.
+
+``AxisType`` only exists in newer jax releases; on older installs we fall
+back to plain meshes (every axis behaves as the legacy default), keeping the
+module importable — and the test suite collectable — everywhere.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(2, 4), axes=("data", "model")):
@@ -24,8 +38,7 @@ def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     want = int(np.prod(shape))
     if want > n:
         shape = (1, n)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
-def mesh_axes_dict(mesh) -> dict[str, int]:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+from repro.core.engine import mesh_axes_dict  # noqa: E402  (re-export)

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
+from repro.core.plancache import PlanCache
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh, mesh_axes_dict
 from repro.models import transformer as tf
@@ -60,14 +61,21 @@ def prepare_decode_caches(cfg, prefill_caches, prompt_len: int, kv_len: int):
 
 def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
           kv_len: int | None = None, params=None, greedy: bool = True,
-          seed: int = 0):
-    """prompts: (b, prompt_len) int32.  Returns (b, max_new) generations."""
+          seed: int = 0, plan_cache=None):
+    """prompts: (b, prompt_len) int32.  Returns (b, max_new) generations.
+
+    ``plan_cache`` is a ``core.plancache.PlanCache`` or a path to its JSON
+    store: the planner warm-starts from it (a structurally identical graph
+    planned by any earlier process is a cache hit, skipping the §8 DP) and
+    persists the plan it used for the next restart."""
     mesh = mesh or make_host_mesh()
+    plan_cache = PlanCache.coerce(plan_cache)
     b, prompt_len = prompts.shape
     kv_len = kv_len or (cfg.kv_len(ShapeConfig("serve", "decode",
                                                prompt_len + max_new, b)))
     shape = ShapeConfig("serve", "prefill", prompt_len, b)
-    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=False)
+    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=False,
+                               cache=plan_cache)
 
     if params is None:
         params = tf.init_params(cfg, jax.random.PRNGKey(seed))
@@ -102,6 +110,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--plan-cache", default=None,
+                    help="path to a persistent plan-cache JSON store; "
+                         "warm-starts the planner across restarts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -110,7 +121,8 @@ def main() -> None:
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
-    gen, stats = serve(cfg, prompts, max_new=args.max_new)
+    gen, stats = serve(cfg, prompts, max_new=args.max_new,
+                       plan_cache=args.plan_cache)
     print("generations:\n", gen)
     print(stats)
 

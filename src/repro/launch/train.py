@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config, reduced
+from repro.core.plancache import PlanCache
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import SyntheticLM, batch_shardings
 from repro.launch import steps
@@ -38,10 +39,14 @@ from repro.optim.schedules import cosine_schedule, wsd_schedule
 def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
           mesh=None, ckpt_dir: str | None = None, ckpt_every: int = 50,
           schedule: str = "cosine", peak_lr: float = 3e-4,
-          log_every: int = 10, seed: int = 0) -> dict:
+          log_every: int = 10, seed: int = 0, plan_cache=None) -> dict:
     mesh = mesh or make_host_mesh()
     axes = mesh_axes_dict(mesh)
-    _, plan, policy = plan_for(cfg, shape, axes, fsdp=True)
+    # warm-start planning from the persistent cache: on restart (or elastic
+    # reshard onto a mesh some earlier job already planned) the §8 DP is a
+    # cache hit instead of a re-run.
+    _, plan, policy = plan_for(cfg, shape, axes, fsdp=True,
+                               cache=PlanCache.coerce(plan_cache))
 
     if schedule == "wsd":
         lr_fn = lambda s: wsd_schedule(s, peak_lr=peak_lr,
@@ -114,6 +119,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--schedule", default="cosine")
+    ap.add_argument("--plan-cache", default=None,
+                    help="path to a persistent plan-cache JSON store; "
+                         "warm-starts the planner across restarts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -121,7 +129,7 @@ def main() -> None:
         cfg = reduced(cfg)
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     train(cfg, shape, steps_total=args.steps, ckpt_dir=args.ckpt,
-          schedule=args.schedule)
+          schedule=args.schedule, plan_cache=args.plan_cache)
 
 
 if __name__ == "__main__":

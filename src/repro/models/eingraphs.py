@@ -17,6 +17,7 @@ all-to-all traffic (DESIGN.md §2 adaptation 3, §4 arch-applicability).
 from __future__ import annotations
 
 import functools
+import math
 
 from repro.core.decomp import Plan, eindecomp
 from repro.core.einsum import EinGraph
@@ -198,24 +199,41 @@ def build_graph(cfg, shape, *, mode: str | None = None) -> EinGraph:
 
 
 @functools.lru_cache(maxsize=None)
+def _graph_cached(cfg, shape) -> EinGraph:
+    return build_graph(cfg, shape)
+
+
+@functools.lru_cache(maxsize=None)
 def _plan_cached(cfg, shape, mesh_key: tuple, offpath_repart: bool):
     mesh_axes = dict(mesh_key)
-    g = build_graph(cfg, shape)
-    p = 1
-    for v in mesh_axes.values():
-        p *= v
-    plan = eindecomp(g, p, mesh_axes=mesh_axes, offpath_repart=offpath_repart)
+    g = _graph_cached(cfg, shape)
+    plan = eindecomp(g, math.prod(mesh_axes.values()), mesh_axes=mesh_axes,
+                     offpath_repart=offpath_repart)
     return g, plan
 
 
 def plan_for(cfg, shape, mesh_axes: dict[str, int], *,
-             fsdp: bool = False, offpath_repart: bool = True
-             ) -> tuple[EinGraph, Plan, ShardingPolicy]:
+             fsdp: bool = False, offpath_repart: bool = True,
+             cache=None) -> tuple[EinGraph, Plan, ShardingPolicy]:
     """Run EinDecomp for one (arch x shape x mesh) cell and derive the
     production ShardingPolicy.  ``fsdp`` additionally ZeRO-shards params
-    over the data axes (train shapes; beyond-paper §Perf lever)."""
-    g, plan = _plan_cached(cfg, shape,
-                           tuple(sorted(mesh_axes.items())), offpath_repart)
+    over the data axes (train shapes; beyond-paper §Perf lever).
+
+    ``cache`` is an optional ``core.plancache.PlanCache``; when given it
+    replaces the process-local lru memo, which means plans survive process
+    restarts (disk-backed caches) and transfer across isomorphic graphs —
+    e.g. two archs whose block graphs coincide structurally plan once."""
+    if cache is not None:
+        # graph construction is memoized in-process; the canonical hash is
+        # memoized on the graph object, so repeated replanning through the
+        # persistent cache stays O(lookup) after the first call.
+        g = _graph_cached(cfg, shape)
+        plan = eindecomp(g, math.prod(mesh_axes.values()),
+                         mesh_axes=dict(mesh_axes),
+                         offpath_repart=offpath_repart, cache=cache)
+    else:
+        g, plan = _plan_cached(cfg, shape,
+                               tuple(sorted(mesh_axes.items())), offpath_repart)
     fsdp_axes = ()
     if fsdp:
         fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)

@@ -1,0 +1,302 @@
+"""Canonicalization + plan-cache invariants (core/canon.py, core/plancache.py).
+
+The contract under test: the canonical hash is invariant under exactly the
+transformations that leave the §8 plan space unchanged — per-node label
+renaming, joint (label, bound) permutation, and commutative operand order —
+and a plan pulled from the cache (in-memory or through the on-disk JSON
+store) prices identically to a freshly planned one on every model-zoo graph.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core import canon, engine
+from repro.core.decomp import eindecomp, eindecomp_tree, plan_cost
+from repro.core.einsum import EinGraph, EinSpec
+from repro.core.plancache import PlanCache
+from repro.models.eingraphs import build_graph
+
+ZOO = ["llama-7b"] + list(ARCH_IDS)
+MESH = {"data": 2, "model": 2}
+P = 4
+
+
+def chain_graph(labels=("i", "j", "k", "l"), name="chain", swap=False):
+    i, j, k, l = labels
+    g = EinGraph(name)
+    a = g.input("A", (i, j), (64, 128))
+    b = g.input("B", (j, k), (128, 64))
+    c = g.input("C", (k, l), (64, 32))
+    if swap:
+        ab = g.einsum(f"{j}{k},{i}{j}->{i}{k}", b, a)
+    else:
+        ab = g.einsum(f"{i}{j},{j}{k}->{i}{k}", a, b)
+    g.einsum(f"{i}{k},{k}{l}->{i}{l}", ab, c)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# canonical-hash invariants
+# ---------------------------------------------------------------------------
+
+
+def test_label_renamed_graphs_hash_identically():
+    assert canon.graph_key(chain_graph()) == \
+        canon.graph_key(chain_graph(labels=("p", "q", "r", "t")))
+
+
+def test_relabel_graph_helper_hashes_identically():
+    g = chain_graph()
+    assert canon.graph_key(canon.relabel_graph(g)) == canon.graph_key(g)
+
+
+def test_commutative_operand_swap_hashes_identically():
+    assert canon.graph_key(chain_graph(swap=True)) == \
+        canon.graph_key(chain_graph())
+
+
+def test_non_commutative_operand_swap_differs():
+    def build(order):
+        g = EinGraph()
+        a = g.input("A", "ij", (8, 8))
+        b = g.input("B", "jk", (8, 8))
+        args = (a, b) if order == 0 else (b, a)
+        expr = "ij,jk->ik" if order == 0 else "jk,ij->ik"
+        g.einsum(expr, *args, combine="sub", agg="sum")
+        return g
+
+    assert canon.graph_key(build(0)) != canon.graph_key(build(1))
+
+
+def test_non_isomorphic_graphs_do_not_collide():
+    keys = set()
+    g1 = chain_graph()
+    keys.add(canon.graph_key(g1))
+    # different bounds
+    g2 = EinGraph()
+    a = g2.input("A", "ij", (64, 64))
+    b = g2.input("B", "jk", (64, 64))
+    g2.einsum("ij,jk->ik", a, b)
+    keys.add(canon.graph_key(g2))
+    # different aggregation
+    g3 = EinGraph()
+    a = g3.input("A", "ij", (64, 64))
+    b = g3.input("B", "jk", (64, 64))
+    g3.einsum("ij,jk->ik", a, b, agg="max")
+    keys.add(canon.graph_key(g3))
+    # different structure (extra map)
+    g4 = EinGraph()
+    a = g4.input("A", "ij", (64, 64))
+    b = g4.input("B", "jk", (64, 64))
+    ab = g4.einsum("ij,jk->ik", a, b)
+    g4.map("relu", ab)
+    keys.add(canon.graph_key(g4))
+    assert len(keys) == 4
+
+
+def test_zoo_graphs_have_distinct_keys():
+    keys = {canon.graph_key(build_graph(get_config(a), SHAPES["train_4k"]))
+            for a in ZOO}
+    assert len(keys) == len(ZOO)
+
+
+def test_spec_key_invariants():
+    s = EinSpec((("i", "j"), ("j", "k")), ("i", "k"))
+    renamed_swapped = EinSpec((("q", "r"), ("p", "q")), ("p", "r"))
+    assert canon.spec_key(s) == canon.spec_key(renamed_swapped)
+    noncomm = EinSpec((("i", "j"), ("j", "k")), ("i", "k"), "sub", "sum")
+    noncomm_swapped = EinSpec((("j", "k"), ("i", "j")), ("i", "k"), "sub", "sum")
+    assert canon.spec_key(noncomm) != canon.spec_key(noncomm_swapped)
+    assert canon.spec_key(s) != canon.spec_key(noncomm)
+    # bound signature distinguishes extents but not their label names
+    assert canon.spec_key(s, {"i": 4, "j": 8, "k": 4}) == \
+        canon.spec_key(renamed_swapped, {"p": 4, "q": 8, "r": 4})
+    assert canon.spec_key(s, {"i": 4, "j": 8, "k": 4}) != \
+        canon.spec_key(s, {"i": 8, "j": 8, "k": 4})
+
+
+# ---------------------------------------------------------------------------
+# cache behavior
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_cache_hit_same_cost():
+    g = chain_graph()
+    cache = PlanCache()
+    fresh = eindecomp(g, 8, cache=cache)
+    warm = eindecomp(g, 8, cache=cache)
+    assert cache.hits == 1
+    assert plan_cost(g, warm) == fresh.cost
+
+
+def test_renamed_graph_is_cache_hit():
+    g = chain_graph()
+    cache = PlanCache()
+    fresh = eindecomp(g, 8, offpath_repart=True, cache=cache)
+    g2 = canon.relabel_graph(g)
+    hit = eindecomp(g2, 8, offpath_repart=True, cache=cache)
+    assert cache.hits == 1 and cache.misses == 1
+    assert plan_cost(g2, hit) == fresh.cost
+
+
+def test_different_p_and_cost_mode_are_distinct_entries():
+    g = chain_graph()
+    cache = PlanCache()
+    eindecomp(g, 4, cache=cache)
+    eindecomp(g, 8, cache=cache)
+    eindecomp(g, 8, cost_mode="collective", cache=cache)
+    assert cache.hits == 0 and len(cache) == 3
+
+
+def test_tree_planner_cached_separately():
+    g = chain_graph()
+    cache = PlanCache()
+    dag = eindecomp(g, 8, cache=cache)
+    tree = eindecomp_tree(g, 8, cache=cache)
+    assert len(cache) == 2
+    tree2 = eindecomp_tree(g, 8, cache=cache)
+    assert tree2.cost == tree.cost
+    assert plan_cost(g, dag) == dag.cost
+
+
+def test_lru_eviction():
+    g = chain_graph()
+    cache = PlanCache(capacity=2)
+    for p in (2, 4, 8):
+        eindecomp(g, p, cache=cache)
+    assert len(cache) == 2
+    eindecomp(g, 2, cache=cache)  # evicted -> replanned, not an error
+    assert cache.misses == 4
+
+
+def test_disk_backed_eviction_revives_without_replanning(tmp_path):
+    """A disk-backed cache holds evicted entries as JSON: looking one up
+    again must revive it (a hit), never re-run the DP."""
+    g = chain_graph()
+    cache = PlanCache(capacity=1, path=str(tmp_path / "plans.json"))
+    p2 = eindecomp(g, 2, cache=cache)
+    eindecomp(g, 4, cache=cache)  # evicts the p=2 entry from the LRU
+    revived = eindecomp(g, 2, cache=cache)
+    assert cache.hits == 1 and cache.misses == 2
+    assert plan_cost(g, revived) == p2.cost
+
+
+@pytest.mark.parametrize("arch", ZOO)
+def test_zoo_cache_roundtrip_cost_identical(arch, tmp_path):
+    """Every model-zoo graph: plan fresh, round-trip through the on-disk
+    JSON store in a new PlanCache (simulating a restart), and through a
+    label-renamed copy; both must return plans with identical §7 cost."""
+    cfg = get_config(arch)
+    g = build_graph(cfg, SHAPES["train_4k"])
+    store = str(tmp_path / "plans.json")
+
+    cache = PlanCache(path=store)
+    fresh = eindecomp(g, P, mesh_axes=MESH, offpath_repart=True, cache=cache)
+
+    # restart: a brand-new cache object warm-started from the JSON file
+    cache2 = PlanCache.open(store)
+    warm = eindecomp(g, P, mesh_axes=MESH, offpath_repart=True, cache=cache2)
+    assert cache2.hits == 1 and cache2.misses == 0
+    assert plan_cost(g, warm) == fresh.cost
+
+    # isomorphic transfer through the restarted cache
+    g2 = canon.relabel_graph(g)
+    renamed = eindecomp(g2, P, mesh_axes=MESH, offpath_repart=True,
+                        cache=cache2)
+    assert cache2.hits == 2
+    assert plan_cost(g2, renamed) == fresh.cost
+    # mesh-mode plans must come back with usable axis assignments
+    assert renamed.axes_by_node
+
+
+def test_lru_eviction_never_deletes_disk_entries(tmp_path):
+    """The disk store only grows by use: evicting an entry from the
+    in-memory LRU (or writing through a small-capacity cache) must not drop
+    previously persisted plans from the JSON file."""
+    store = str(tmp_path / "plans.json")
+    cache = PlanCache(capacity=1, path=store)
+    eindecomp(chain_graph(), 2, cache=cache)
+    eindecomp(chain_graph(), 4, cache=cache)  # evicts the p=2 entry from RAM
+    assert len(cache) == 1
+    reloaded = PlanCache(capacity=8, path=store)
+    assert len(reloaded) == 2  # both survive on disk
+    warm = eindecomp(chain_graph(), 2, cache=reloaded)
+    assert reloaded.hits == 1 and warm.p == 2
+
+
+def test_eviction_with_deferred_save_persists_everything(tmp_path):
+    """autosave=False bulk-planning (the documented pattern): entries
+    evicted before the final save() must still reach the store."""
+    store = str(tmp_path / "plans.json")
+    cache = PlanCache(capacity=1, path=store, autosave=False)
+    eindecomp(chain_graph(), 2, cache=cache)
+    eindecomp(chain_graph(), 4, cache=cache)  # evicts p=2 before any save
+    cache.save()
+    assert len(PlanCache(capacity=8, path=store)) == 2
+
+
+def test_corrupt_store_degrades_to_cold_start(tmp_path):
+    """The cache is an optimization: a corrupt JSON file must warn and start
+    cold, never crash the job, and be overwritten with a valid store."""
+    store = tmp_path / "plans.json"
+    store.write_text("{ this is not json")
+    with pytest.warns(UserWarning, match="unreadable store"):
+        cache = PlanCache.open(str(store))
+    assert len(cache) == 0
+    g = chain_graph()
+    eindecomp(g, 8, cache=cache)
+    reloaded = PlanCache.open(str(store))  # insert rewrote a valid file
+    assert len(reloaded) == 1
+
+
+def test_make_runner_plans_through_cache():
+    g = chain_graph()
+    cache = PlanCache()
+    f = engine.make_runner(g, p=8, cache=cache)
+    assert len(cache) == 1
+    rng = np.random.default_rng(0)
+    feeds = [rng.normal(size=n.shape).astype(np.float32)
+             for n in g.nodes if n.kind == "input"]
+    np.testing.assert_allclose(np.asarray(f(*feeds)),
+                               feeds[0] @ feeds[1] @ feeds[2], rtol=1e-4)
+    # second runner for an isomorphic graph: planning is a pure cache hit
+    g2 = canon.relabel_graph(g)
+    engine.make_runner(g2, p=8, cache=cache)
+    assert cache.hits == 1
+    # planning inputs with nothing to apply or warm are rejected
+    with pytest.raises(ValueError, match="no effect"):
+        engine.make_runner(g2, p=8)
+    # ...and a cache with nothing to plan with is rejected, not ignored
+    with pytest.raises(ValueError, match="nothing to plan with"):
+        engine.make_runner(g2, cache=cache)
+
+
+def test_insert_from_relabeled_graph_stays_canonical():
+    """Plan entries must live in each node's *own* label space: inserting
+    from a graph whose node-local labels differ across nodes (relabel_graph)
+    and hitting from a third relabeling must return input/map entries keyed
+    by the caller's labels, never the inserting graph's."""
+    g = chain_graph()
+    g_ins = canon.relabel_graph(g)
+    cache = PlanCache()
+    fresh = eindecomp(g_ins, 8, offpath_repart=True, cache=cache)
+    g_hit = canon.relabel_graph(g, lambda nid, l: f"{l}_x{nid}")
+    hit = eindecomp(g_hit, 8, offpath_repart=True, cache=cache)
+    assert cache.hits == 1
+    for n in g_hit.nodes:
+        universe = set(n.labels)
+        if n.spec is not None:
+            for ls in n.spec.in_labels:
+                universe.update(ls)
+        assert set(hit.d_by_node[n.nid]) <= universe, (n.nid, hit.d_by_node[n.nid])
+    assert plan_cost(g_hit, hit) == plan_cost(g_ins, fresh)
+
+
+def test_path_memo_reuses_isomorphic_layers():
+    """Two structurally identical attention+ffn periods inside one graph:
+    the second period's path DP must hit the memo."""
+    cfg = get_config("llama-7b")
+    g = build_graph(cfg, SHAPES["train_4k"])
+    cache = PlanCache()
+    eindecomp(g, P, mesh_axes=MESH, offpath_repart=True, cache=cache)
+    assert cache.path_hits >= 1, cache.stats
