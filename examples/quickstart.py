@@ -1,73 +1,94 @@
-"""Quickstart: the paper in one file.
+"""Quickstart: the paper in one file, on the declarative Program surface.
 
-1. Declare a computation in EinSum notation (an EinGraph).
-2. EinDecomp chooses a partitioning vector per node (the TRA decomposition).
-3. Execute it two ways — through the faithful tensor-relational reference
-   runtime (keyed sub-tensors, join/agg/repartition) and through the
-   production JAX engine (GSPMD shardings) — and check they agree.
+1. Declare a computation symbolically — named tensors + extended einsum
+   expressions (no graphs, no node ids).
+2. ``Program.compile`` traces it to an EinGraph and runs EinDecomp (the §8
+   DP, through the persistent plan cache) to choose a partitioning vector
+   per node.
+3. Execute it two ways — through the compiled Program (JAX engine) and
+   through the faithful tensor-relational reference runtime (keyed
+   sub-tensors, join/agg/repartition) — and check they agree.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.decomp import eindecomp, plan_sqrt
-from repro.core.einsum import EinGraph
-from repro.core import engine
+from repro import frontend as ein
+from repro.core.decomp import plan_sqrt
+from repro.core.einsum import resolve_feeds
 from repro.core.tra import execute_graph_tra
 
 
 def main() -> None:
     # --- 1. declare:  Z = softmax_rows((A @ B) / 8) @ C ---------------------
-    g = EinGraph("quickstart")
-    A = g.input("A", "ij", (64, 128))
-    B = g.input("B", "jk", (128, 64))
-    C = g.input("C", "kl", (64, 32))
-    AB = g.einsum("ij,jk->ik", A, B, name="AB")
-    scaled = g.map("scale", AB, c=1 / 8.0)
-    # the paper's §3 softmax, written as EinSum nodes
-    mx = g.einsum("ik->i", scaled, combine="id", agg="max")
-    e = g.einsum("ik,i->ik", scaled, mx, combine="expsub", agg="")
-    s = g.einsum("ik->i", e, combine="id", agg="sum")
-    sm = g.einsum("ik,i->ik", e, s, combine="div", agg="")
-    Z = g.einsum("ik,kl->il", sm, C, name="Z")
-    print(g)
+    A = ein.tensor("A", "i j", (64, 128))
+    B = ein.tensor("B", "j k", (128, 64))
+    C = ein.tensor("C", "k l", (64, 32))
+    AB = ein.einsum("i j, j k -> i k", A, B, name="AB")
+    scaled = AB / 8.0                                  # scalar ops are maps
+    # the paper's §3 softmax, written as extended-einsum expressions
+    mx = ein.einsum("i k -> i", scaled, agg="max")
+    e = ein.einsum("i k, i -> i k", scaled, mx, combine="expsub", agg="")
+    s = ein.einsum("i k -> i", e, agg="sum")
+    sm = ein.einsum("i k, i -> i k", e, s, combine="div", agg="")
+    Z = ein.einsum("i k, k l -> i l", sm, C, name="Z")
 
-    # --- 2. decompose for p=8 devices ---------------------------------------
-    plan = eindecomp(g, p=8, offpath_repart=True)
-    sqrt_plan = plan_sqrt(g, 8)
+    prog = ein.Program({"Z": Z}, name="quickstart")
+    print(prog)
+    print(prog.graph)
+
+    # --- 2. compile: EinDecomp for p=8 devices ------------------------------
+    run = prog.compile(p=8)
+    plan = run.plan
+    sqrt_plan = plan_sqrt(prog.graph, 8)
     print(f"\nEinDecomp plan cost: {plan.cost:,} floats moved "
           f"(SQRT heuristic: {sqrt_plan.cost:,})")
     for nid, d in sorted(plan.d_by_node.items()):
-        print(f"  node {nid:2d} {g.nodes[nid].name:10s} d={d}")
+        print(f"  node {nid:2d} {prog.graph.nodes[nid].name:10s} d={d}")
 
-    # --- 3a. execute through the TRA reference runtime ----------------------
+    # --- 3a. execute the compiled program (name-keyed I/O) ------------------
     rng = np.random.default_rng(0)
-    feeds = {n.nid: rng.normal(size=n.shape).astype(np.float32)
-             for n in g.nodes if n.kind == "input"}
-    vals, stats = execute_graph_tra(g, plan.d_by_node, feeds)
+    feeds = {"A": rng.normal(size=(64, 128)).astype(np.float32),
+             "B": rng.normal(size=(128, 64)).astype(np.float32),
+             "C": rng.normal(size=(64, 32)).astype(np.float32)}
+    z = run(feeds)["Z"]
+
+    # --- 3b. cross-check against the TRA reference runtime ------------------
+    tra_feeds = resolve_feeds(prog.graph, feeds)       # names -> node ids
+    vals, stats = execute_graph_tra(prog.graph, plan.d_by_node, tra_feeds)
     print(f"\nTRA execution: {stats['kernel_calls']} kernel calls, "
           f"{stats['repartitions']} repartitions")
-
-    # --- 3b. execute through the JAX engine ---------------------------------
-    jax_vals = engine.run(g, feeds)
-    np.testing.assert_allclose(vals[Z].to_dense(), np.asarray(jax_vals[Z]),
+    z_nid = prog.graph.outputs()[0]
+    np.testing.assert_allclose(vals[z_nid].to_dense(), np.asarray(z),
                                rtol=1e-4, atol=1e-5)
-    print("TRA result == JAX result  [OK]")
+    print("TRA result == Program result  [OK]")
 
-    # --- 4. cache the plan: isomorphic graphs replan in ~µs -----------------
+    # --- 4. cache the plan: isomorphic programs replan in ~µs ---------------
     import time
 
     from repro.core.plancache import PlanCache
 
     cache = PlanCache()
     t0 = time.perf_counter()
-    eindecomp(g, p=8, offpath_repart=True, cache=cache)   # cold: runs the DP
+    prog.compile(p=8, cache=cache)                 # cold: runs the DP
     cold = time.perf_counter() - t0
     t0 = time.perf_counter()
-    eindecomp(g, p=8, offpath_repart=True, cache=cache)   # warm: cache hit
+    prog.compile(p=8, cache=cache)                 # warm: cache hit
     warm = time.perf_counter() - t0
     print(f"plan cache: cold {cold * 1e3:.2f}ms -> warm {warm * 1e3:.3f}ms "
           f"({cache.stats})")
+
+    # --- 5. differentiate: the training program is just another Program -----
+    # (a relu chain: core/autodiff covers contractions, add/sub/mul and maps)
+    P = ein.einsum("i k, k l -> i l", AB.map("relu"), C, name="P")
+    Y = ein.tensor("Y", "i l", (64, 32))
+    loss = ein.einsum("i l -> ", (P - Y) ** 2, agg="sum")
+    gprog = ein.Program({"loss": loss}).grad(wrt=["B", "C"])
+    grun = gprog.compile(p=8)
+    gres = grun({**feeds, "Y": np.zeros((64, 32), np.float32)})
+    print(f"\ngrad program: loss={float(gres['loss']):.1f}, "
+          f"grad_B {gres['grad_B'].shape}, grad_C {gres['grad_C'].shape}, "
+          f"fwd+bwd planned jointly at cost {grun.plan.cost:,}")
 
 
 if __name__ == "__main__":

@@ -168,3 +168,37 @@ def cost_agg_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]
         return 0
     out_total = _prod(bounds[l] for l in spec.out_labels)
     return (n_agg - 1) * out_total // n_agg
+
+
+def cost_join_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """Collective pricing of the join's input movement.
+
+    Partitioning vector ``d`` yields p = N(lX, lY, d) join sites; input i,
+    stored as n_i = prod(d over its own labels) blocks, is therefore needed
+    at r_i = p / n_i sites per block.  On a torus that replication is a
+    broadcast / all-gather over each replica group: the copy already
+    resident is free and every one of the (r_i - 1) extra copies crosses
+    the wire exactly once, so the term is (r_i - 1) * numel_i per input —
+    exactly the §7 p2p join bound r_i * numel_i minus the resident copies.
+    Unary nodes move nothing (map runs in place).
+    """
+    if len(spec.in_labels) == 1:
+        return 0
+    lx, ly = spec.in_labels
+    p = n_join_results(lx, ly, d)
+    total = 0
+    for ls in (lx, ly):
+        n_i = _prod(d[l] for l in ls)
+        r = p // n_i
+        if r > 1:
+            total += (r - 1) * _prod(bounds[l] for l in ls)
+    return total
+
+
+def node_cost_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
+    """cost_join_collective + cost_agg_collective — the collective-mode
+    counterpart of ``node_cost``.  (Historically the collective mode
+    silently dropped the join term entirely, which made any replicating
+    partitioning look free; regression-pinned in tests/test_cost.py.)"""
+    return (cost_join_collective(spec, d, bounds)
+            + cost_agg_collective(spec, d, bounds))

@@ -27,9 +27,8 @@ from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
 from repro.core import cost as _cost
-from repro.core.cost import (cost_agg, cost_agg_collective, cost_join,
-                             cost_repart, cost_repart_collective,
-                             node_cost)
+from repro.core.cost import (cost_repart, cost_repart_collective,
+                             node_cost, node_cost_collective)
 from repro.core.einsum import EinGraph, EinSpec, Node
 from repro.core.tra import ld_concat, project
 
@@ -70,8 +69,7 @@ class CostModel:
 
     def node(self, spec, d, bounds):
         if self.mode == "collective":
-            return cost_join(spec, d, bounds) * 0 + cost_agg_collective(
-                spec, d, bounds)
+            return node_cost_collective(spec, d, bounds)
         return node_cost(spec, d, bounds)
 
 

@@ -136,23 +136,50 @@ class EinSpec:
         ins = ",".join("".join(ren[l] for l in ls) for ls in self.in_labels)
         return f"{ins}->{''.join(ren[l] for l in self.out_labels)}"
 
+    def pretty(self) -> str:
+        """The spec's labels as a ``parse_einsum``-able string, preserving
+        the original label names: ``"b s e, e h d -> b s h d"``.
+
+        One irreducible ambiguity: if some label is multi-character but
+        *every* side holds at most one label, no side contains a space and
+        the parser would read characters — fall back to the canonical
+        single-char rendering (``einsum_str``) for that corner.
+        """
+        sides = [" ".join(ls) for ls in self.in_labels]
+        sides.append(" ".join(self.out_labels))
+        multi = any(len(l) > 1 for l in self.all_labels)
+        if multi and not any(" " in s for s in sides):
+            return self.einsum_str()
+        return f"{', '.join(sides[:-1])} -> {sides[-1]}"
+
 
 def parse_einsum(expr: str) -> tuple[tuple[tuple[str, ...], ...], tuple[str, ...]]:
     """Parse "b s e, e h d -> b s h d" (space-separated multi-char labels) or
-    "bse,ehd->bshd" (single-char labels)."""
+    "bse,ehd->bshd" (single-char labels).
+
+    Word mode is decided for the *whole expression*: if any side contains a
+    space, every side is split on whitespace — so a spaceless side inside a
+    spaced expression ("b s e, e -> b s") is one single label, never a run
+    of characters.  A fully spaceless expression parses per character.
+    """
     lhs, rhs = expr.split("->")
+    sides = [s.strip() for s in lhs.split(",")] + [rhs.strip()]
+    word_mode = any(" " in s for s in sides)
+
     def side(s: str) -> tuple[str, ...]:
-        s = s.strip()
-        if " " in s:
-            return tuple(s.split())
-        return tuple(s)
-    ins = tuple(side(op) for op in lhs.split(","))
-    return ins, side(rhs)
+        return tuple(s.split()) if word_mode else tuple(s)
+
+    return tuple(side(s) for s in sides[:-1]), side(sides[-1])
 
 
 # ---------------------------------------------------------------------------
 # Nodes + graph
 # ---------------------------------------------------------------------------
+
+
+#: Node params consumed by the planner only (cost declarations), never
+#: forwarded to the op's executable implementation.
+PLANNER_ONLY_PARAMS = frozenset({"comm"})
 
 
 @dataclass
@@ -176,6 +203,12 @@ class Node:
     @property
     def rank(self) -> int:
         return len(self.shape)
+
+    @property
+    def call_params(self) -> dict:
+        """Params to pass the executable op (planner declarations dropped)."""
+        return {k: v for k, v in self.params.items()
+                if k not in PLANNER_ONLY_PARAMS}
 
     def bound_of(self, label: str) -> int:
         return self.shape[self.labels.index(label)]
@@ -301,6 +334,51 @@ def _as_labels(labels: str | Sequence[str]) -> tuple[str, ...]:
 
 
 # ---------------------------------------------------------------------------
+# Feed resolution: name-keyed (or node-id-keyed) feeds -> {nid: value}
+# ---------------------------------------------------------------------------
+
+
+def resolve_feeds(g: EinGraph, feeds: dict) -> dict[int, Any]:
+    """Resolve a feed dict keyed by input *names* (or node ids, or a mix)
+    into ``{node id: value}``.
+
+    The reference runtimes and the frontend agree on I/O keys through this
+    one function: names resolve once, a name shared by two input nodes is an
+    error (ambiguous), an unknown name is an error, and any graph input left
+    unfed is an error listing what is missing.  Integer keys pass through
+    untouched (the historical surface), including extras for non-input
+    nodes, which evaluation simply ignores.
+    """
+    by_name: dict[str, int] = {}
+    dups: set[str] = set()
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if n.name in by_name:
+            dups.add(n.name)
+        by_name[n.name] = n.nid
+    out: dict[int, Any] = {}
+    for k, v in feeds.items():
+        if isinstance(k, str):
+            if k in dups:
+                raise ValueError(
+                    f"feed name {k!r} is ambiguous: multiple input nodes "
+                    "share it — feed by node id or rename the inputs")
+            if k not in by_name:
+                raise KeyError(
+                    f"unknown input name {k!r}; graph inputs are "
+                    f"{sorted(by_name)}")
+            out[by_name[k]] = v
+        else:
+            out[int(k)] = v
+    missing = [n.name for n in g.nodes
+               if n.kind == "input" and n.nid not in out]
+    if missing:
+        raise ValueError(f"missing feeds for inputs {missing}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Dense reference evaluation (numpy) — the semantic ground truth used by the
 # TRA equivalence tests.  Slow and simple on purpose.
 # ---------------------------------------------------------------------------
@@ -336,12 +414,16 @@ def eval_einsum_dense(spec: EinSpec, *arrays: np.ndarray) -> np.ndarray:
     return np.transpose(joined, order)
 
 
-def eval_graph_dense(g: EinGraph, feeds: dict[int, np.ndarray],
+def eval_graph_dense(g: EinGraph, feeds: dict,
                      map_fns: dict[str, Callable] | None = None,
                      opaque_fns: dict[str, Callable] | None = None) -> dict[int, np.ndarray]:
-    """Dense numpy evaluation of the whole graph (reference oracle)."""
+    """Dense numpy evaluation of the whole graph (reference oracle).
+
+    ``feeds`` may be keyed by input *name* or node id (see resolve_feeds).
+    """
     from repro.core import engine as _eng  # late import; shares map registry
 
+    feeds = resolve_feeds(g, feeds)
     vals: dict[int, np.ndarray] = {}
     for nid in g.topo_order():
         n = g.nodes[nid]
@@ -354,5 +436,6 @@ def eval_graph_dense(g: EinGraph, feeds: dict[int, np.ndarray],
             vals[nid] = np.asarray(fn(vals[n.inputs[0]], **n.params))
         else:
             fn = (opaque_fns or {}).get(n.op) or _eng.OPAQUE_FNS[n.op]
-            vals[nid] = np.asarray(fn(*[vals[a] for a in n.inputs], **n.params))
+            vals[nid] = np.asarray(fn(*[vals[a] for a in n.inputs],
+                                      **n.call_params))
     return vals

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.einsum import EinGraph, EinSpec, Node
+from repro.core.einsum import EinGraph, EinSpec, Node, resolve_feeds
 
 # ---------------------------------------------------------------------------
 # Per-node lowering
@@ -190,7 +190,11 @@ def run(
 ) -> dict[int, jnp.ndarray]:
     """Evaluate the graph with jnp.  If a mesh-mode plan is given, each node
     output gets a ``with_sharding_constraint`` so GSPMD realizes the
-    EinDecomp decomposition."""
+    EinDecomp decomposition.
+
+    ``feeds`` may be keyed by input *name* or node id (resolve_feeds): the
+    reference runtimes and the frontend agree on I/O keys."""
+    feeds = resolve_feeds(g, feeds)
     specs = None
     if plan is not None and mesh is not None and plan.axes_by_node:
         specs = {nid: NamedSharding(
@@ -207,7 +211,7 @@ def run(
         elif n.kind == "map":
             v = MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
         else:
-            v = OPAQUE_FNS[n.op](*[vals[a] for a in n.inputs], **n.params)
+            v = OPAQUE_FNS[n.op](*[vals[a] for a in n.inputs], **n.call_params)
         if specs is not None and constrain and nid in specs:
             v = jax.lax.with_sharding_constraint(v, specs[nid])
         vals[nid] = v

@@ -315,7 +315,8 @@ def execute_graph_tra(
             from repro.core import engine as _eng
 
             fn = _eng.OPAQUE_FNS[n.op]
-            dense = np.asarray(fn(*[vals[a].to_dense() for a in n.inputs], **n.params))
+            dense = np.asarray(fn(*[vals[a].to_dense() for a in n.inputs],
+                                  **n.call_params))
             d = plan.get(nid)
             parts = label_parts(d, n.labels) if d else tuple([1] * len(dense.shape))
             vals[nid] = TensorRelation.from_dense(dense, parts)

@@ -1,0 +1,23 @@
+"""The declarative expression frontend (usually imported as ``ein``):
+
+    from repro import frontend as ein
+
+    x = ein.tensor("x", "b s a", (4, 128, 256))
+    w = ein.tensor("w", "a f", (256, 1024))
+    h = ein.einsum("b s a, a f -> b s f", x, w).map("silu")
+    prog = ein.Program({"h": h})
+    run = prog.compile(mesh_axes={"data": 4, "model": 2}, cache="plans.json")
+    out = run({"x": X, "w": W})["h"]
+
+``expr.py`` holds the lazy symbolic-tensor layer (declaration + trace into
+the EinGraph IR), ``program.py`` the Program/CompiledProgram lifecycle
+(graph → plan → cache → runner).
+"""
+from repro.frontend.expr import (Expr, einsum, map_, maximum, opaque,
+                                 register_opaque, tensor, trace)
+from repro.frontend.program import CompiledProgram, LoweredProgram, Program
+
+__all__ = [
+    "Expr", "einsum", "map_", "maximum", "opaque", "register_opaque",
+    "tensor", "trace", "Program", "CompiledProgram", "LoweredProgram",
+]

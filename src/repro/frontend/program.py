@@ -1,0 +1,303 @@
+"""`Program`: one object owning the graph → plan → cache → runner lifecycle.
+
+The paper's workflow is declare → decompose → execute; before this module
+the repo exposed it as four separate entry points (``eindecomp``,
+``plan_for``, ``engine.make_runner``, ``policy_from_plan``) glued together
+by integer node ids.  ``Program`` is the single surface:
+
+    x = ein.tensor("x", "b a", (8, 64))
+    w = ein.tensor("w", "a f", (64, 128))
+    y = ein.einsum("b a, a f -> b f", x, w)
+    prog = ein.Program({"y": y})
+    run = prog.compile(p=8, cache="plans.json")     # eindecomp + plan cache
+    out = run({"x": X, "w": W})["y"]                # name-keyed I/O
+
+``compile`` runs EinDecomp through the persistent plan cache (a hit skips
+the §8 DP exactly as with the raw entry points), and the result is a
+jit-compiled callable taking and returning **name-keyed dicts**.  ``.plan``
+exposes the decomposition, ``.lower()`` the per-node partitionings and
+PartitionSpecs, ``.policy()`` the production ShardingPolicy projection, and
+``Program.grad(wrt=...)`` derives the training program via
+``core/autodiff`` — still a plain Program, so the same DP plans forward and
+backward jointly (the paper's Experiment 2).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.einsum import EinGraph
+from repro.frontend.expr import Expr, trace
+
+
+class Program:
+    """A declared computation with named inputs and named outputs.
+
+    Construct from expressions — ``Program(z)``, ``Program([z1, z2])`` or
+    ``Program({"logits": z})`` — or from an already-traced graph with
+    ``Program.from_graph``.  Tracing happens once, eagerly; ``.graph`` is
+    the underlying ``EinGraph``.
+    """
+
+    def __init__(self, outputs, *, name: str = "program"):
+        named = _normalize_outputs(outputs)
+        self.name = name
+        self.graph, ids = trace(list(named.values()), name)
+        self._out: dict[str, int] = {k: ids[e] for k, e in named.items()}
+        self._default_ones: frozenset[str] = frozenset()
+
+    @classmethod
+    def from_graph(cls, g: EinGraph, outputs: Mapping[str, int], *,
+                   default_ones: Sequence[str] = (),
+                   name: str | None = None) -> "Program":
+        """Wrap an existing EinGraph (node-id outputs) as a Program.
+
+        ``default_ones`` names inputs that default to ``ones`` when unfed —
+        used for gradient seeds, so a grad program is callable with just the
+        forward feeds.
+        """
+        self = cls.__new__(cls)
+        self.name = name if name is not None else g.name
+        self.graph = g
+        self._out = {str(k): int(v) for k, v in outputs.items()}
+        self._default_ones = frozenset(default_ones)
+        names = [n.name for n in g.nodes if n.kind == "input"]
+        dups = sorted({x for x in names if names.count(x) > 1})
+        if dups:
+            raise ValueError(f"from_graph: duplicate input names {dups} — "
+                             "Program I/O is name-keyed")
+        for k, v in self._out.items():
+            if not 0 <= v < len(g.nodes):
+                raise ValueError(f"from_graph: output {k!r} -> bad node id {v}")
+        return self
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def input_names(self) -> tuple[str, ...]:
+        return tuple(n.name for n in self.graph.nodes if n.kind == "input")
+
+    @property
+    def output_names(self) -> tuple[str, ...]:
+        return tuple(self._out)
+
+    def __repr__(self):
+        ins = ", ".join(self.input_names)
+        outs = ", ".join(self._out)
+        return (f"Program({self.name!r}, {len(self.graph.nodes)} nodes, "
+                f"inputs=[{ins}], outputs=[{outs}])")
+
+    # -- autodiff -------------------------------------------------------------
+
+    def grad(self, wrt: str | Sequence[str], *,
+             output: str | None = None) -> "Program":
+        """The training program: outputs the differentiated value plus
+        ``grad_<name>`` for every input in ``wrt`` (core/autodiff reverse
+        mode — the backward pass is EinSum nodes in the same graph, so one
+        EinDecomp run plans fwd+bwd jointly).
+
+        The gradient seed is an input named ``dLoss_seed`` that defaults to
+        ones; feed it explicitly to chain an incoming cotangent.
+        """
+        from repro.core.autodiff import grad_graph
+
+        if output is None:
+            if len(self._out) != 1:
+                raise ValueError(
+                    f"grad: program has outputs {list(self._out)}; pass "
+                    "output=<name> to pick the one to differentiate")
+            output = next(iter(self._out))
+        wrt_names = [wrt] if isinstance(wrt, str) else list(wrt)
+        by_name = {n.name: n.nid for n in self.graph.nodes if n.kind == "input"}
+        unknown = [w for w in wrt_names if w not in by_name]
+        if unknown:
+            raise KeyError(f"grad: unknown inputs {unknown}; "
+                           f"inputs are {sorted(by_name)}")
+        gg, grads, seed = grad_graph(self.graph, self._out[output],
+                                     [by_name[w] for w in wrt_names])
+        outs = {output: self._out[output]}
+        outs.update({f"grad_{w}": grads[by_name[w]] for w in wrt_names})
+        return Program.from_graph(
+            gg, outs, default_ones=(gg.nodes[seed].name,),
+            name=f"{self.name}:grad")
+
+    # -- compile --------------------------------------------------------------
+
+    def compile(self, *, mesh=None, mesh_axes: dict[str, int] | None = None,
+                p: int | None = None, cost_model: str = "paper",
+                cache=None, offpath_repart: bool = True,
+                jit: bool = True) -> "CompiledProgram":
+        """Run EinDecomp (through the plan cache) and build the runner.
+
+        Planning inputs mirror ``eindecomp``/``make_runner``: a jax ``mesh``
+        (or explicit ``mesh_axes``) selects torus-conformable mesh mode and
+        attaches GSPMD sharding constraints; a bare ``p`` selects the
+        paper's power-of-two mode (plan only, no constraints); neither
+        means no planning at all — a plain jit-compiled runner.  ``cache``
+        is a ``PlanCache`` or a path to its JSON store; a hit skips the §8
+        DP entirely.  ``cost_model`` is ``"paper"`` or ``"collective"``.
+        """
+        from repro.core.decomp import CostModel, eindecomp
+        from repro.core.engine import mesh_axes_dict
+        from repro.core.plancache import PlanCache
+
+        cache = PlanCache.coerce(cache)
+        if isinstance(cost_model, CostModel):
+            cost_model = cost_model.mode
+        if mesh is not None and mesh_axes is None:
+            mesh_axes = mesh_axes_dict(mesh)
+        plan = None
+        if mesh_axes is not None or p is not None:
+            if p is None:
+                p = math.prod(mesh_axes.values())
+            plan = eindecomp(self.graph, p, mesh_axes=mesh_axes,
+                             cost_mode=cost_model,
+                             offpath_repart=offpath_repart, cache=cache)
+        elif cache is not None:
+            raise ValueError("compile: cache given but nothing to plan "
+                             "with — pass mesh, mesh_axes, or p")
+        return CompiledProgram(self, plan=plan, mesh=mesh, jit=jit)
+
+
+class CompiledProgram:
+    """A jit-compiled, name-keyed callable over a planned Program.
+
+    ``run({"x": X, ...})`` (or keyword form ``run(x=X, ...)``) returns
+    ``{output name: array}``.  ``.plan`` is the EinDecomp result (None if
+    compiled without planning inputs), ``.lower()`` the introspection
+    surface, ``.policy()`` the production ShardingPolicy.
+    """
+
+    def __init__(self, program: Program, *, plan=None, mesh=None,
+                 jit: bool = True):
+        import jax
+
+        from repro.core import engine
+
+        self.program = program
+        self.plan = plan
+        self.mesh = mesh
+        g = program.graph
+        self._in_ids = g.input_ids()
+        self._in_names = tuple(g.nodes[i].name for i in self._in_ids)
+        self._out_names = tuple(program._out)
+        out_ids = [program._out[k] for k in self._out_names]
+        in_ids = self._in_ids
+
+        def _positional(*arrays):
+            vals = engine.run(g, dict(zip(in_ids, arrays)),
+                              plan=plan, mesh=mesh)
+            return tuple(vals[o] for o in out_ids)
+
+        self._fn = jax.jit(_positional) if jit else _positional
+
+    @property
+    def graph(self) -> EinGraph:
+        return self.program.graph
+
+    def __call__(self, feeds: Mapping[str, Any] | None = None, /,
+                 **kw) -> dict[str, Any]:
+        feeds = {**(feeds or {}), **kw}
+        for name in self.program._default_ones:
+            if name not in feeds:
+                node = next(n for n in self.graph.nodes
+                            if n.kind == "input" and n.name == name)
+                feeds[name] = np.ones(node.shape, node.dtype)
+        unknown = sorted(set(feeds) - set(self._in_names))
+        if unknown:
+            raise KeyError(f"unknown inputs {unknown}; "
+                           f"program inputs are {sorted(self._in_names)}")
+        missing = [n for n in self._in_names if n not in feeds]
+        if missing:
+            raise ValueError(f"missing feeds for inputs {missing}")
+        outs = self._fn(*[feeds[n] for n in self._in_names])
+        return dict(zip(self._out_names, outs))
+
+    def grad(self, wrt: str | Sequence[str], *,
+             output: str | None = None) -> "Program":
+        """Convenience: the (uncompiled) gradient program — compile it with
+        the planning inputs of your choice."""
+        return self.program.grad(wrt, output=output)
+
+    def policy(self, *, fsdp_axes: Sequence[str] = (), remat: bool = True):
+        """Collapse the mesh-mode plan to the production ``ShardingPolicy``
+        (models/policy.py) the model stack applies via GSPMD."""
+        from repro.models.policy import policy_from_plan
+
+        if self.plan is None:
+            raise ValueError("policy(): program was compiled without "
+                             "planning inputs (no plan)")
+        return policy_from_plan(self.plan, self.graph,
+                                fsdp_axes=tuple(fsdp_axes), remat=remat)
+
+    def lower(self) -> "LoweredProgram":
+        """Introspection: the traced graph, the plan, and (in mesh mode)
+        the per-node PartitionSpecs GSPMD will be constrained with."""
+        shardings = None
+        if self.plan is not None and self.plan.axes_by_node:
+            from repro.core.engine import spec_for_node
+
+            shardings = {
+                n.nid: spec_for_node(n, self.plan.axes_by_node.get(n.nid, {}))
+                for n in self.graph.nodes}
+        return LoweredProgram(graph=self.graph, plan=self.plan,
+                              shardings=shardings,
+                              outputs=dict(self.program._out))
+
+
+@dataclass
+class LoweredProgram:
+    """What ``CompiledProgram.lower()`` returns: everything between the
+    declaration and the executable, in one inspectable object."""
+
+    graph: EinGraph
+    plan: Any
+    shardings: dict[int, Any] | None
+    outputs: dict[str, int]
+
+    def as_text(self) -> str:
+        lines = [repr(self.graph)]
+        if self.plan is not None:
+            lines.append(f"plan: p={self.plan.p} mode={self.plan.mode} "
+                         f"cost={self.plan.cost:,} floats")
+            for nid in sorted(self.plan.d_by_node):
+                n = self.graph.nodes[nid]
+                d = self.plan.d_by_node[nid]
+                extra = ""
+                if self.shardings is not None and nid in self.shardings:
+                    extra = f"  {self.shardings[nid]}"
+                lines.append(f"  [{nid:3d}] {n.name:20s} d={d}{extra}")
+        outs = ", ".join(f"{k}=[{v}]" for k, v in self.outputs.items())
+        lines.append(f"outputs: {outs}")
+        return "\n".join(lines)
+
+    def __repr__(self):
+        return self.as_text()
+
+
+def _normalize_outputs(outputs) -> dict[str, Expr]:
+    if isinstance(outputs, Expr):
+        outputs = [outputs]
+    if isinstance(outputs, Mapping):
+        named = {str(k): v for k, v in outputs.items()}
+    else:
+        named = {}
+        for i, e in enumerate(outputs):
+            if not isinstance(e, Expr):
+                raise TypeError(f"Program: output {i} is {type(e).__name__}, "
+                                "expected Expr")
+            key = e.name or f"out{i}"
+            if key in named:
+                raise ValueError(f"Program: duplicate output name {key!r} — "
+                                 "pass a dict to name outputs explicitly")
+            named[key] = e
+    if not named:
+        raise ValueError("Program: no outputs")
+    for k, e in named.items():
+        if not isinstance(e, Expr):
+            raise TypeError(f"Program: output {k!r} is {type(e).__name__}, "
+                            "expected Expr")
+    return named

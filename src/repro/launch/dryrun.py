@@ -44,6 +44,26 @@ HBM_BW = 819e9          # bytes/s
 ICI_BW = 50e9           # bytes/s/link
 
 
+# process-wide plan cache for the dry-run sweep: isomorphic cells (same
+# block structure at the same bounds and mesh) plan once across the whole
+# --all matrix, exactly like a disk-backed cache would across jobs.
+_PLAN_CACHE = None
+
+
+def _plan_cell(cfg, shape, axes, fsdp):
+    """EinDecomp one cell through the Program surface -> (plan, policy)."""
+    from repro.core.plancache import PlanCache
+    from repro.models.eingraphs import fsdp_axes_for, program_for
+
+    global _PLAN_CACHE
+    if _PLAN_CACHE is None:
+        _PLAN_CACHE = PlanCache(capacity=128)
+    compiled = program_for(cfg, shape).compile(mesh_axes=axes,
+                                               cache=_PLAN_CACHE)
+    policy = compiled.policy(fsdp_axes=fsdp_axes_for(axes) if fsdp else ())
+    return compiled.plan, policy
+
+
 def build_cell(cfg, shape, mesh, *, fsdp: bool | None = None,
                policy_override=None, unroll: bool = False):
     """(step_fn, example_args_with_shardings, donate, plan, policy)."""
@@ -51,7 +71,6 @@ def build_cell(cfg, shape, mesh, *, fsdp: bool | None = None,
     from repro.launch import steps
     from repro.launch.mesh import mesh_axes_dict
     from repro.models import transformer as tf
-    from repro.models.eingraphs import plan_for
     from repro.optim import adamw_init
 
     axes = mesh_axes_dict(mesh)
@@ -60,7 +79,7 @@ def build_cell(cfg, shape, mesh, *, fsdp: bool | None = None,
     if policy_override is not None:
         policy, plan = policy_override, None
     else:
-        _, plan, policy = plan_for(cfg, shape, axes, fsdp=fsdp)
+        plan, policy = _plan_cell(cfg, shape, axes, fsdp)
 
     params = tf.init_params(cfg, abstract=True)
     pshard = tf.param_shardings(cfg, policy, mesh)
@@ -284,14 +303,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def _plan_only(cfg, shape, mesh, fsdp, policy_override):
     from repro.launch.mesh import mesh_axes_dict
-    from repro.models.eingraphs import plan_for
 
     if policy_override is not None:
         return None, policy_override
     if fsdp is None:
         fsdp = shape.kind == "train"
-    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=fsdp)
-    return plan, policy
+    return _plan_cell(cfg, shape, mesh_axes_dict(mesh), fsdp)
 
 
 def main() -> None:

@@ -17,12 +17,11 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
-from repro.core.plancache import PlanCache
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh, mesh_axes_dict
 from repro.models import transformer as tf
 from repro.models.attention import KVCache
-from repro.models.eingraphs import plan_for
+from repro.models.eingraphs import program_for
 
 
 def _ring_pack(cache_kv: KVCache, prompt_len: int, window: int) -> KVCache:
@@ -69,13 +68,15 @@ def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
     planned by any earlier process is a cache hit, skipping the §8 DP) and
     persists the plan it used for the next restart."""
     mesh = mesh or make_host_mesh()
-    plan_cache = PlanCache.coerce(plan_cache)
     b, prompt_len = prompts.shape
     kv_len = kv_len or (cfg.kv_len(ShapeConfig("serve", "decode",
                                                prompt_len + max_new, b)))
     shape = ShapeConfig("serve", "prefill", prompt_len, b)
-    _, plan, policy = plan_for(cfg, shape, mesh_axes_dict(mesh), fsdp=False,
-                               cache=plan_cache)
+    # declare -> trace -> decompose (through the plan cache) -> project:
+    # the serving path runs entirely on the Program surface.
+    compiled = program_for(cfg, shape).compile(
+        mesh_axes=mesh_axes_dict(mesh), cache=plan_cache)
+    policy = compiled.policy()
 
     if params is None:
         params = tf.init_params(cfg, jax.random.PRNGKey(seed))

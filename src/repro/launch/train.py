@@ -24,14 +24,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, get_config, reduced
-from repro.core.plancache import PlanCache
+from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
 from repro.data.synthetic import SyntheticLM, batch_shardings
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh, mesh_axes_dict
 from repro.models import transformer as tf
-from repro.models.eingraphs import plan_for
+from repro.models.eingraphs import fsdp_axes_for, program_for
 from repro.optim import adamw_init
 from repro.optim.schedules import cosine_schedule, wsd_schedule
 
@@ -44,9 +43,11 @@ def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
     axes = mesh_axes_dict(mesh)
     # warm-start planning from the persistent cache: on restart (or elastic
     # reshard onto a mesh some earlier job already planned) the §8 DP is a
-    # cache hit instead of a re-run.
-    _, plan, policy = plan_for(cfg, shape, axes, fsdp=True,
-                               cache=PlanCache.coerce(plan_cache))
+    # cache hit instead of a re-run.  The training path runs on the Program
+    # surface: declare -> trace -> decompose (cached) -> project to policy.
+    compiled = program_for(cfg, shape).compile(mesh_axes=axes,
+                                               cache=plan_cache)
+    policy = compiled.policy(fsdp_axes=fsdp_axes_for(axes))
 
     if schedule == "wsd":
         lr_fn = lambda s: wsd_schedule(s, peak_lr=peak_lr,

@@ -1,43 +1,50 @@
-"""EinGraph builders for every architecture family + ``plan_for``.
+"""Declarative model builders for every architecture family + ``program_for``.
 
 This is where the paper's technique becomes a first-class feature of the
 framework: each model family's layer (plus embedding and LM head) is
-expressed as an EinGraph over canonical labels
+declared with the symbolic frontend (``repro.frontend``) as extended-einsum
+expressions over canonical labels
 
     b batch  s sequence  t cache-time  a d_model  h q-heads  k kv-heads
     d head_dim  f ffn-hidden  g 2x-expansion  v vocab  e experts  c capacity
 
-EinDecomp (core/decomp.py) then chooses the partitioning per node for the
-target mesh, and ``plan_for`` collapses that to the ShardingPolicy the
-production model stack applies via GSPMD.  Fused ops (flash attention, MoE
-dispatch, recurrent scans) are opaque nodes carrying label metadata and an
-internal-communication declaration (``comm``) so the DP can price ring /
-all-to-all traffic (DESIGN.md §2 adaptation 3, §4 arch-applicability).
+``program_for`` wraps one (arch x shape) cell as a ``Program`` with named
+inputs and a named ``logits`` output; ``Program.compile`` runs EinDecomp
+(through the plan cache) and ``CompiledProgram.policy()`` collapses the plan
+to the ShardingPolicy the production model stack applies via GSPMD.  Fused
+ops (flash attention, MoE dispatch, recurrent scans) are opaque expressions
+carrying label metadata and an internal-communication declaration
+(``comm``) so the DP can price ring / all-to-all traffic (DESIGN.md §2
+adaptation 3, §4 arch-applicability).
+
+``build_graph`` / ``plan_for`` remain as thin shims over the Program
+surface for callers written against the original imperative API.
 """
 from __future__ import annotations
 
 import functools
-import math
 
-from repro.core.decomp import Plan, eindecomp
+from repro import frontend as ein
+from repro.core.decomp import Plan
 from repro.core.einsum import EinGraph
+from repro.frontend import Program
 from repro.models.policy import ShardingPolicy, policy_from_plan
 
 
 # ---------------------------------------------------------------------------
-# Fragments
+# Fragments (symbolic expressions; x is the running "b s a" activation)
 # ---------------------------------------------------------------------------
 
 
-def _attention_nodes(g: EinGraph, x: int, cfg, B: int, S: int, *,
-                     decode: bool = False, kv_len: int = 0) -> int:
+def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
+                     decode: bool = False, kv_len: int = 0) -> ein.Expr:
     H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
-    wq = g.input("wq", "a h d", (D, H, hd))
-    q = g.einsum("b s a, a h d -> b s h d", x, wq, name="q_proj")
+    wq = ein.tensor("wq", "a h d", (D, H, hd))
+    q = ein.einsum("b s a, a h d -> b s h d", x, wq, name="q_proj")
     if decode:
-        kc = g.input("k_cache", "b t k d", (B, kv_len, K, hd))
-        vc = g.input("v_cache", "b t k d", (B, kv_len, K, hd))
-        att = g.opaque(
+        kc = ein.tensor("k_cache", "b t k d", (B, kv_len, K, hd))
+        vc = ein.tensor("v_cache", "b t k d", (B, kv_len, K, hd))
+        att = ein.opaque(
             "flash_attention", [q, kc, vc], "b s h d", (B, S, H, hd),
             in_labels=[("b", "s", "h", "d"), ("b", "t", "k", "d"),
                        ("b", "t", "k", "d")],
@@ -46,11 +53,11 @@ def _attention_nodes(g: EinGraph, x: int, cfg, B: int, S: int, *,
                   {"kind": "ring", "label": "t", "input": 2}],
             name="attn")
     else:
-        wk = g.input("wk", "a k d", (D, K, hd))
-        wv = g.input("wv", "a k d", (D, K, hd))
-        kk = g.einsum("b s a, a k d -> b s k d", x, wk, name="k_proj")
-        vv = g.einsum("b s a, a k d -> b s k d", x, wv, name="v_proj")
-        att = g.opaque(
+        wk = ein.tensor("wk", "a k d", (D, K, hd))
+        wv = ein.tensor("wv", "a k d", (D, K, hd))
+        kk = ein.einsum("b s a, a k d -> b s k d", x, wk, name="k_proj")
+        vv = ein.einsum("b s a, a k d -> b s k d", x, wv, name="v_proj")
+        att = ein.opaque(
             "flash_attention", [q, kk, vv], "b s h d", (B, S, H, hd),
             in_labels=[("b", "s", "h", "d"), ("b", "s", "k", "d"),
                        ("b", "s", "k", "d")],
@@ -58,50 +65,50 @@ def _attention_nodes(g: EinGraph, x: int, cfg, B: int, S: int, *,
             comm=[{"kind": "ring", "label": "s", "input": 1},
                   {"kind": "ring", "label": "s", "input": 2}],
             name="attn")
-    wo = g.input("wo", "h d a", (H, hd, D))
-    return g.einsum("b s h d, h d a -> b s a", att, wo, name="o_proj")
+    wo = ein.tensor("wo", "h d a", (H, hd, D))
+    return ein.einsum("b s h d, h d a -> b s a", att, wo, name="o_proj")
 
 
-def _ffn_nodes(g: EinGraph, x: int, cfg, B: int, S: int,
-               d_ff: int | None = None) -> int:
+def _ffn_nodes(x: ein.Expr, cfg, B: int, S: int,
+               d_ff: int | None = None) -> ein.Expr:
     D = cfg.d_model
     F = d_ff if d_ff is not None else cfg.d_ff
-    w1 = g.input("w1", "a f", (D, F))
-    h = g.einsum("b s a, a f -> b s f", x, w1, name="ffn_up")
-    h = g.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu", h)
+    w1 = ein.tensor("w1", "a f", (D, F))
+    h = ein.einsum("b s a, a f -> b s f", x, w1, name="ffn_up")
+    h = h.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu")
     if cfg.gated_ffn:
-        w3 = g.input("w3", "a f", (D, F))
-        hg = g.einsum("b s a, a f -> b s f", x, w3, name="ffn_gate")
-        h = g.einsum("b s f, b s f -> b s f", h, hg, combine="mul", agg="",
-                     name="ffn_mul")
-    w2 = g.input("w2", "f a", (F, D))
-    return g.einsum("b s f, f a -> b s a", h, w2, name="ffn_down")
+        w3 = ein.tensor("w3", "a f", (D, F))
+        hg = ein.einsum("b s a, a f -> b s f", x, w3, name="ffn_gate")
+        h = ein.einsum("b s f, b s f -> b s f", h, hg, combine="mul", agg="",
+                       name="ffn_mul")
+    w2 = ein.tensor("w2", "f a", (F, D))
+    return ein.einsum("b s f, f a -> b s a", h, w2, name="ffn_down")
 
 
-def _moe_nodes(g: EinGraph, x: int, cfg, B: int, S: int) -> int:
+def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
     D, E, F = cfg.d_model, cfg.n_e, cfg.d_ff
     T = B * S
     C = max(128, -(-int(T * cfg.top_k / E * cfg.capacity_factor) // 128) * 128)
-    wr = g.input("router_w", "a e", (D, E))
-    route = g.einsum("b s a, a e -> b s e", x, wr, name="router")
-    disp = g.opaque(
+    wr = ein.tensor("router_w", "a e", (D, E))
+    route = ein.einsum("b s a, a e -> b s e", x, wr, name="router")
+    disp = ein.opaque(
         "moe_dispatch", [x, route], "e c a", (E, C, D),
         in_labels=[("b", "s", "a"), ("b", "s", "e")],
         shardable={"e", "c", "b", "s"},
         comm=[{"kind": "a2a", "label": "e", "input": 0},
               {"kind": "a2a", "label": "c", "input": 0}],
         name="dispatch")
-    we1 = g.input("we1", "e a f", (E, D, F))
-    h = g.einsum("e c a, e a f -> e c f", disp, we1, name="expert_up")
-    h = g.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu", h)
+    we1 = ein.tensor("we1", "e a f", (E, D, F))
+    h = ein.einsum("e c a, e a f -> e c f", disp, we1, name="expert_up")
+    h = h.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu")
     if cfg.gated_ffn:
-        we3 = g.input("we3", "e a f", (E, D, F))
-        hg = g.einsum("e c a, e a f -> e c f", disp, we3, name="expert_gate")
-        h = g.einsum("e c f, e c f -> e c f", h, hg, combine="mul", agg="",
-                     name="expert_mul")
-    we2 = g.input("we2", "e f a", (E, F, D))
-    y = g.einsum("e c f, e f a -> e c a", h, we2, name="expert_down")
-    comb = g.opaque(
+        we3 = ein.tensor("we3", "e a f", (E, D, F))
+        hg = ein.einsum("e c a, e a f -> e c f", disp, we3, name="expert_gate")
+        h = ein.einsum("e c f, e c f -> e c f", h, hg, combine="mul", agg="",
+                       name="expert_mul")
+    we2 = ein.tensor("we2", "e f a", (E, F, D))
+    y = ein.einsum("e c f, e f a -> e c a", h, we2, name="expert_down")
+    comb = ein.opaque(
         "moe_combine", [y, route], "b s a", (B, S, D),
         in_labels=[("e", "c", "a"), ("b", "s", "e")],
         shardable={"b", "s", "e", "c"},
@@ -109,13 +116,13 @@ def _moe_nodes(g: EinGraph, x: int, cfg, B: int, S: int) -> int:
               {"kind": "a2a", "label": "c", "input": 0}],
         name="combine")
     if cfg.shared_expert_ff:
-        sh = _ffn_nodes(g, x, cfg, B, S, d_ff=cfg.shared_expert_ff)
-        comb = g.einsum("b s a, b s a -> b s a", comb, sh, combine="add",
-                        agg="", name="moe_add_shared")
+        sh = _ffn_nodes(x, cfg, B, S, d_ff=cfg.shared_expert_ff)
+        comb = ein.einsum("b s a, b s a -> b s a", comb, sh, combine="add",
+                          agg="", name="moe_add_shared")
     return comb
 
 
-def _recurrent_nodes(g: EinGraph, x: int, cfg, B: int, S: int, kind: str) -> int:
+def _recurrent_nodes(x: ein.Expr, cfg, B: int, S: int, kind: str) -> ein.Expr:
     """mLSTM / sLSTM / SSM path as proj -> opaque scan -> proj.
 
     The scan's sequence label is non-partitionable (shardable excludes s) —
@@ -125,24 +132,25 @@ def _recurrent_nodes(g: EinGraph, x: int, cfg, B: int, S: int, kind: str) -> int
     """
     D = cfg.d_model
     F = 2 * D
-    win = g.input(f"{kind}_in", "a f", (D, F))
-    h = g.einsum("b s a, a f -> b s f", x, win, name=f"{kind}_up")
+    win = ein.tensor(f"{kind}_in", "a f", (D, F))
+    h = ein.einsum("b s a, a f -> b s f", x, win, name=f"{kind}_up")
     shardable = {"b"} if kind == "slstm" else {"b", "f"}
-    scan = g.opaque(
+    scan = ein.opaque(
         f"{kind}_scan", [h], "b s f", (B, S, F),
         in_labels=[("b", "s", "f")], shardable=shardable,
         name=f"{kind}_scan")
-    wdn = g.input(f"{kind}_down", "f a", (F, D))
-    return g.einsum("b s f, f a -> b s a", scan, wdn, name=f"{kind}_down_proj")
+    wdn = ein.tensor(f"{kind}_down", "f a", (F, D))
+    return ein.einsum("b s f, f a -> b s a", scan, wdn, name=f"{kind}_down_proj")
 
 
 # ---------------------------------------------------------------------------
-# Whole-graph builders
+# Whole-model declaration
 # ---------------------------------------------------------------------------
 
 
-def build_graph(cfg, shape, *, mode: str | None = None) -> EinGraph:
-    """Embedding -> one block period -> LM head, at the cell's (B, S).
+def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
+    """Embedding -> one block period -> LM head, at the cell's (B, S),
+    declared as one symbolic expression (the logits).
 
     One period is enough: scan reuses the same plan for every unit (the
     per-layer graphs are isomorphic), which is also why the DP stays fast.
@@ -153,89 +161,120 @@ def build_graph(cfg, shape, *, mode: str | None = None) -> EinGraph:
     D, V = cfg.d_model, cfg.vocab_padded
     kv_len = cfg.kv_len(shape) if mode == "decode" else 0
 
-    g = EinGraph(f"{cfg.name}:{shape.name}:{mode}")
-    ids = g.input("ids", "b s", (B, S), dtype="int32")
-    table = g.input("embed", "v a", (V, D))
-    x = g.opaque("gather_rows", [table, ids], "b s a", (B, S, D),
-                 in_labels=[("v", "a"), ("b", "s")],
-                 shardable={"b", "s", "a"}, name="embed_lookup")
+    ids = ein.tensor("ids", "b s", (B, S), dtype="int32")
+    table = ein.tensor("embed", "v a", (V, D))
+    x = ein.opaque("gather_rows", [table, ids], "b s a", (B, S, D),
+                   in_labels=[("v", "a"), ("b", "s")],
+                   shardable={"b", "s", "a"}, name="embed_lookup")
 
     for blk in cfg.block_pattern:
         if blk == "attn":
-            a = _attention_nodes(g, x, cfg, B, S, decode=(mode == "decode"),
+            a = _attention_nodes(x, cfg, B, S, decode=(mode == "decode"),
                                  kv_len=kv_len)
-            x = g.einsum("b s a, b s a -> b s a", x, a, combine="add", agg="",
-                         name="resid_attn")
-            m = (_moe_nodes(g, x, cfg, B, S) if cfg.moe
-                 else _ffn_nodes(g, x, cfg, B, S))
-            x = g.einsum("b s a, b s a -> b s a", x, m, combine="add", agg="",
-                         name="resid_ffn")
+            x = ein.einsum("b s a, b s a -> b s a", x, a, combine="add",
+                           agg="", name="resid_attn")
+            m = (_moe_nodes(x, cfg, B, S) if cfg.moe
+                 else _ffn_nodes(x, cfg, B, S))
+            x = ein.einsum("b s a, b s a -> b s a", x, m, combine="add",
+                           agg="", name="resid_ffn")
         elif blk == "hymba":
-            a = _attention_nodes(g, x, cfg, B, S, decode=(mode == "decode"),
+            a = _attention_nodes(x, cfg, B, S, decode=(mode == "decode"),
                                  kv_len=kv_len)
-            sm = _recurrent_nodes(g, x, cfg, B, S, "ssm")
-            mix = g.einsum("b s a, b s a -> b s a", a, sm, combine="add",
-                           agg="", name="hymba_mix")
-            x = g.einsum("b s a, b s a -> b s a", x, mix, combine="add",
-                         agg="", name="resid_mix")
-            f = _ffn_nodes(g, x, cfg, B, S)
-            x = g.einsum("b s a, b s a -> b s a", x, f, combine="add", agg="",
-                         name="resid_ffn")
+            sm = _recurrent_nodes(x, cfg, B, S, "ssm")
+            mix = ein.einsum("b s a, b s a -> b s a", a, sm, combine="add",
+                             agg="", name="hymba_mix")
+            x = ein.einsum("b s a, b s a -> b s a", x, mix, combine="add",
+                           agg="", name="resid_mix")
+            f = _ffn_nodes(x, cfg, B, S)
+            x = ein.einsum("b s a, b s a -> b s a", x, f, combine="add",
+                           agg="", name="resid_ffn")
         elif blk in ("mlstm", "slstm"):
-            r = _recurrent_nodes(g, x, cfg, B, S, blk)
-            x = g.einsum("b s a, b s a -> b s a", x, r, combine="add", agg="",
-                         name=f"resid_{blk}")
+            r = _recurrent_nodes(x, cfg, B, S, blk)
+            x = ein.einsum("b s a, b s a -> b s a", x, r, combine="add",
+                           agg="", name=f"resid_{blk}")
         else:
             raise ValueError(blk)
 
-    head = g.input("head", "a v", (D, V))
-    g.einsum("b s a, a v -> b s v", x, head, name="lm_head")
-    return g
+    head = ein.tensor("head", "a v", (D, V))
+    return ein.einsum("b s a, a v -> b s v", x, head, name="lm_head")
 
 
-# ---------------------------------------------------------------------------
-# Planning entry point
-# ---------------------------------------------------------------------------
+def _build_program(cfg, shape, *, mode: str | None = None) -> Program:
+    mode_str = mode or ("decode" if shape.kind == "decode" else shape.kind)
+    logits = build_expr(cfg, shape, mode=mode)
+    return Program({"logits": logits},
+                   name=f"{cfg.name}:{shape.name}:{mode_str}")
 
 
 @functools.lru_cache(maxsize=None)
-def _graph_cached(cfg, shape) -> EinGraph:
-    return build_graph(cfg, shape)
+def _program_cached(cfg, shape) -> Program:
+    return _build_program(cfg, shape)
+
+
+def program_for(cfg, shape, *, mode: str | None = None) -> Program:
+    """The declarative surface for one (arch x shape) cell: a ``Program``
+    with name-keyed inputs and a ``logits`` output.  Memoized per (cfg,
+    shape) for the default mode — programs (and their traced graphs) are
+    immutable after construction."""
+    if mode is None:
+        return _program_cached(cfg, shape)
+    return _build_program(cfg, shape, mode=mode)
+
+
+def fsdp_axes_for(mesh_axes: dict[str, int]) -> tuple[str, ...]:
+    """The data-parallel mesh axes ZeRO-style parameter sharding lands on
+    (train shapes; beyond-paper §Perf lever)."""
+    return tuple(a for a in ("pod", "data") if a in mesh_axes)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: the original imperative entry points
+# ---------------------------------------------------------------------------
+
+
+def build_graph(cfg, shape, *, mode: str | None = None) -> EinGraph:
+    """Deprecated shim: the traced ``EinGraph`` of ``program_for(cfg,
+    shape)`` — identical node-for-node to what the original imperative
+    builder produced (tests/test_program_equivalence.py pins this)."""
+    return program_for(cfg, shape, mode=mode).graph
 
 
 @functools.lru_cache(maxsize=None)
 def _plan_cached(cfg, shape, mesh_key: tuple, offpath_repart: bool):
-    mesh_axes = dict(mesh_key)
-    g = _graph_cached(cfg, shape)
-    plan = eindecomp(g, math.prod(mesh_axes.values()), mesh_axes=mesh_axes,
-                     offpath_repart=offpath_repart)
-    return g, plan
+    prog = _program_cached(cfg, shape)
+    compiled = prog.compile(mesh_axes=dict(mesh_key),
+                            offpath_repart=offpath_repart)
+    return prog.graph, compiled.plan
 
 
 def plan_for(cfg, shape, mesh_axes: dict[str, int], *,
              fsdp: bool = False, offpath_repart: bool = True,
              cache=None) -> tuple[EinGraph, Plan, ShardingPolicy]:
-    """Run EinDecomp for one (arch x shape x mesh) cell and derive the
-    production ShardingPolicy.  ``fsdp`` additionally ZeRO-shards params
-    over the data axes (train shapes; beyond-paper §Perf lever).
+    """Deprecated shim over ``program_for(cfg, shape).compile(...)``: run
+    EinDecomp for one (arch x shape x mesh) cell and derive the production
+    ShardingPolicy.  ``fsdp`` additionally ZeRO-shards params over the data
+    axes (train shapes; beyond-paper §Perf lever).
 
     ``cache`` is an optional ``core.plancache.PlanCache``; when given it
     replaces the process-local lru memo, which means plans survive process
     restarts (disk-backed caches) and transfer across isomorphic graphs —
-    e.g. two archs whose block graphs coincide structurally plan once."""
+    e.g. two archs whose block graphs coincide structurally plan once.
+    New code should hold the ``CompiledProgram`` instead:
+
+        compiled = program_for(cfg, shape).compile(mesh_axes=axes, cache=...)
+        plan, policy = compiled.plan, compiled.policy(fsdp_axes=...)
+    """
     if cache is not None:
-        # graph construction is memoized in-process; the canonical hash is
+        # program construction is memoized in-process; the canonical hash is
         # memoized on the graph object, so repeated replanning through the
         # persistent cache stays O(lookup) after the first call.
-        g = _graph_cached(cfg, shape)
-        plan = eindecomp(g, math.prod(mesh_axes.values()),
-                         mesh_axes=dict(mesh_axes),
-                         offpath_repart=offpath_repart, cache=cache)
+        prog = program_for(cfg, shape)
+        compiled = prog.compile(mesh_axes=dict(mesh_axes),
+                                offpath_repart=offpath_repart, cache=cache)
+        g, plan = prog.graph, compiled.plan
     else:
         g, plan = _plan_cached(cfg, shape,
                                tuple(sorted(mesh_axes.items())), offpath_repart)
-    fsdp_axes = ()
-    if fsdp:
-        fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh_axes)
-    policy = policy_from_plan(plan, g, fsdp_axes=fsdp_axes)
+    policy = policy_from_plan(plan, g,
+                              fsdp_axes=fsdp_axes_for(mesh_axes) if fsdp else ())
     return g, plan, policy

@@ -1,8 +1,10 @@
 """Cost model (paper §7) against the paper's own worked examples."""
 import pytest
 
-from repro.core.cost import (cost_agg, cost_join, cost_repart,
-                             cost_repart_collective, n_join_results)
+from repro.core.cost import (cost_agg, cost_agg_collective, cost_join,
+                             cost_join_collective, cost_repart,
+                             cost_repart_collective, n_join_results,
+                             node_cost, node_cost_collective)
 from repro.core.einsum import EinSpec
 
 MM = EinSpec((("i", "j"), ("j", "k")), ("i", "k"))
@@ -62,3 +64,40 @@ def test_collective_mode_cheaper_for_allgather():
     paper = cost_repart((8, 1), (1, 1), (64, 64))
     coll = cost_repart_collective((8, 1), (1, 1), (64, 64))
     assert coll < paper
+
+
+def test_collective_node_cost_includes_join_replication():
+    """Regression: collective mode used to price nodes as
+    ``cost_join(...) * 0 + cost_agg_collective(...)`` — silently dropping
+    the join term, which made any replicating partitioning look free.  The
+    dedicated ``node_cost_collective`` must charge (r-1)*numel per input."""
+    from repro.core.decomp import CostModel
+
+    b64 = {"i": 64, "j": 64, "k": 64}
+    # d splits only k (absent from X=[i,j]): X is replicated 8x at the join,
+    # nothing is aggregated (d_j = 1) — the old expression priced this at 0.
+    d = {"i": 1, "j": 1, "k": 8}
+    assert cost_agg_collective(MM, d, b64) == 0          # the old (buggy) total
+    coll = node_cost_collective(MM, d, b64)
+    assert coll == cost_join_collective(MM, d, b64) == 7 * 64 * 64
+    # collective join = paper join minus the resident copies, never more
+    assert 0 < coll <= node_cost(MM, d, b64)
+
+    # both modes agree the two pieces compose the node cost
+    cm_p, cm_c = CostModel("paper"), CostModel("collective")
+    for dd in ({"i": 2, "j": 2, "k": 2}, {"i": 1, "j": 8, "k": 1},
+               {"i": 8, "j": 1, "k": 1}):
+        assert cm_p.node(MM, dd, b64) == node_cost(MM, dd, b64)
+        assert cm_c.node(MM, dd, b64) == node_cost_collective(MM, dd, b64)
+        assert cm_c.node(MM, dd, b64) <= cm_p.node(MM, dd, b64)
+
+    # aggregation-heavy partitioning: reduce-scatter term still present
+    dagg = {"i": 1, "j": 8, "k": 1}
+    assert cost_agg_collective(MM, dagg, b64) > 0
+    assert (node_cost_collective(MM, dagg, b64)
+            == cost_join_collective(MM, dagg, b64)
+            + cost_agg_collective(MM, dagg, b64))
+
+    # unary nodes still move nothing at the join in either mode
+    unary = EinSpec((("i", "j"),), ("i",), "id", "sum")
+    assert cost_join_collective(unary, {"i": 4, "j": 2}, b64) == 0

@@ -1,0 +1,133 @@
+"""Round-trip property tests for the extended-einsum string parser and
+pretty-printer: ``parse_einsum`` ↔ ``EinSpec.pretty`` / ``einsum_str``.
+
+``hypothesis`` is optional (requirements-dev.txt): when installed the
+properties are fuzzed over random specs; otherwise a deterministic grid
+covers the same territory — unary specs, empty-agg elementwise nodes,
+non-sum aggregations, scalar outputs, word-mode vs char-mode labels, and
+the documented single-multi-char-label ambiguity fallback.
+"""
+import pytest
+
+from repro.core import canon
+from repro.core.einsum import AGGS, EinSpec, parse_einsum
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+
+# ---------------------------------------------------------------------------
+# Deterministic case grid
+# ---------------------------------------------------------------------------
+
+
+def _cases():
+    for L in ("ijkl", ("batch", "seq", "heads", "ff")):
+        a, b, c, d = L
+        # binary contraction (sum) and non-sum aggregations
+        yield EinSpec(((a, b), (b, c)), (a, c), "mul", "sum")
+        yield EinSpec(((a, b), (b, c)), (a,), "maximum", "max")
+        yield EinSpec(((a, b), (b, c)), (c,), "add", "min")
+        yield EinSpec(((a, b, c), (c, d)), (d, a, b), "sqdiff", "prod")
+        # binary elementwise (empty agg), incl. transposed output
+        yield EinSpec(((a, b, c), (a, b, c)), (c, b, a), "add", "")
+        yield EinSpec(((a, b), (a, b)), (a, b), "div", "")
+        # unary: full reduce to scalar, partial reduce, elementwise permute
+        yield EinSpec(((a, b),), (), "id", "sum")
+        yield EinSpec(((a, b, c),), (c, a), "exp", "prod")
+        yield EinSpec(((a, b, c),), (b, c, a), "neg", "")
+        yield EinSpec(((a,),), (a,), "square", "")
+    # word mode with a spaceless single-label side
+    yield EinSpec((("batch", "seq"), ("seq",)), ("batch",), "mul", "sum")
+    # irreducible ambiguity: every side at most one multi-char label
+    yield EinSpec((("batch",),), ("batch",), "id", "")
+    yield EinSpec((("batch",), ("batch",)), (), "mul", "sum")
+
+
+def _assert_roundtrip(spec: EinSpec):
+    s = spec.pretty()
+    ins, outs = parse_einsum(s)
+    rebuilt = EinSpec(ins, outs, spec.combine, spec.agg)
+    if s == spec.einsum_str() and (ins, outs) != (spec.in_labels, spec.out_labels):
+        # documented fallback: canonical single-char rename — structurally
+        # identical spec (same canonical key), different label names
+        assert canon.spec_key(rebuilt) == canon.spec_key(spec)
+    else:
+        assert rebuilt == spec, f"{s!r}: {rebuilt} != {spec}"
+
+
+@pytest.mark.parametrize("spec", list(_cases()),
+                         ids=lambda s: s.pretty().replace(" ", ""))
+def test_pretty_parse_roundtrip(spec):
+    _assert_roundtrip(spec)
+
+
+@pytest.mark.parametrize("spec", list(_cases()),
+                         ids=lambda s: s.pretty().replace(" ", ""))
+def test_einsum_str_parse_is_canonically_isomorphic(spec):
+    """parse(einsum_str()) loses label names by design but must preserve
+    structure exactly (same canonical spec key, same agg semantics)."""
+    ins, outs = parse_einsum(spec.einsum_str())
+    rebuilt = EinSpec(ins, outs, spec.combine, spec.agg)
+    assert canon.spec_key(rebuilt) == canon.spec_key(spec)
+    assert len(rebuilt.agg_labels) == len(spec.agg_labels)
+    assert rebuilt.all_labels == tuple(dict.fromkeys(
+        l for ls in (*rebuilt.in_labels, rebuilt.out_labels) for l in ls))
+
+
+def test_word_mode_is_whole_expression():
+    """A spaceless side inside a spaced expression is ONE label, never a
+    character run (regression for the old per-side heuristic)."""
+    ins, outs = parse_einsum("b s e, e -> b s")
+    assert ins == (("b", "s", "e"), ("e",)) and outs == ("b", "s")
+    # fully spaceless still parses per character
+    ins, outs = parse_einsum("bse,ehd->bshd")
+    assert ins == (("b", "s", "e"), ("e", "h", "d"))
+    assert outs == ("b", "s", "h", "d")
+    # scalar output sides parse to ()
+    assert parse_einsum("i j -> ")[1] == ()
+    assert parse_einsum("ij->")[1] == ()
+
+
+# ---------------------------------------------------------------------------
+# Fuzzed property (hypothesis optional)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYP:
+    _LABELS = st.sampled_from(
+        ["i", "j", "k", "l", "batch", "seq", "heads", "dmodel"])
+
+    @st.composite
+    def _specs(draw):
+        universe = draw(st.lists(_LABELS, min_size=1, max_size=5,
+                                 unique=True))
+        n_in = draw(st.integers(1, 2))
+        ins = []
+        for _ in range(n_in):
+            ls = draw(st.lists(st.sampled_from(universe), min_size=1,
+                               max_size=len(universe), unique=True))
+            ins.append(tuple(ls))
+        all_labels = [l for ls in ins for l in ls]
+        all_unique = list(dict.fromkeys(all_labels))
+        elementwise = draw(st.booleans())
+        if elementwise:
+            out = tuple(draw(st.permutations(all_unique)))
+            agg = ""
+        else:
+            out = tuple(draw(st.permutations(
+                draw(st.lists(st.sampled_from(all_unique), max_size=len(all_unique),
+                              unique=True)))))
+            agg = draw(st.sampled_from(AGGS))
+        combine = draw(st.sampled_from(
+            ["mul", "add", "sub", "div", "maximum"] if n_in == 2
+            else ["id", "exp", "neg", "square"]))
+        return EinSpec(tuple(ins), out, combine, agg)
+
+    @settings(max_examples=200, deadline=None)
+    @given(_specs())
+    def test_roundtrip_property(spec):
+        _assert_roundtrip(spec)

@@ -1,0 +1,254 @@
+"""The declarative frontend (repro.frontend): symbolic tracing, operator
+sugar, name-keyed I/O at the IR layer, and the Program compile lifecycle."""
+import numpy as np
+import pytest
+
+from repro import frontend as ein
+from repro.core import canon, engine
+from repro.core.einsum import EinGraph, eval_graph_dense, resolve_feeds
+from repro.core.plancache import PlanCache
+
+RNG = np.random.default_rng(0)
+
+
+def _chain_exprs():
+    A = ein.tensor("A", "i j", (16, 32))
+    B = ein.tensor("B", "j k", (32, 8))
+    C = ein.tensor("C", "k l", (8, 4))
+    AB = ein.einsum("i j, j k -> i k", A, B, name="AB")
+    Z = ein.einsum("i k, k l -> i l", AB, C, name="Z")
+    return A, B, C, Z
+
+
+# ---------------------------------------------------------------------------
+# Tracing
+# ---------------------------------------------------------------------------
+
+
+def test_trace_matches_imperative_builder():
+    """The traced graph is node-for-node what the imperative builder writing
+    the same calls produces — same canonical key, same names."""
+    *_, Z = _chain_exprs()
+    g, _ = ein.trace([Z], "chain")
+
+    h = EinGraph("chain")
+    a = h.input("A", "ij", (16, 32))
+    b = h.input("B", "jk", (32, 8))
+    c = h.input("C", "kl", (8, 4))
+    ab = h.einsum("ij,jk->ik", a, b, name="AB")
+    h.einsum("ik,kl->il", ab, c, name="Z")
+
+    assert canon.graph_key(g) == canon.graph_key(h)
+    assert [n.name for n in g.nodes] == [n.name for n in h.nodes]
+    assert [n.kind for n in g.nodes] == [n.kind for n in h.nodes]
+
+
+def test_trace_shared_subexpression_emitted_once():
+    x = ein.tensor("x", "i", (8,))
+    y = x.map("relu")
+    z = ein.einsum("i, i -> i", y, y, combine="mul", agg="")
+    g, ids = ein.trace([z])
+    assert len(g.nodes) == 3  # x, relu, mul — y traced once
+    assert g.nodes[ids[z]].inputs == (ids[y], ids[y])
+
+
+def test_trace_duplicate_input_names_rejected():
+    a = ein.tensor("w", "i", (4,))
+    b = ein.tensor("w", "i", (4,))
+    s = ein.einsum("i, i -> i", a, b, combine="add", agg="")
+    with pytest.raises(ValueError, match="duplicate input name"):
+        ein.trace([s])
+
+
+def test_operator_sugar_semantics():
+    x = ein.tensor("x", "i j", (4, 5))
+    y = ein.tensor("y", "i j", (4, 5))
+    exprs = {
+        "add": x + y, "mul": x * y, "sub": x - y, "div": x / y,
+        "maximum": ein.maximum(x, y),
+        "scale": 2.0 * x, "shift": x - 3.0, "rsub": 3.0 - x,
+        "neg": -x, "sq": x ** 2, "sdiv": x / 4.0,
+    }
+    prog = ein.Program(dict(exprs))
+    run = prog.compile(jit=False)
+    X = RNG.normal(size=(4, 5)).astype(np.float32)
+    Y = (RNG.normal(size=(4, 5)).astype(np.float32) + 2.0)
+    out = run({"x": X, "y": Y})
+    want = {
+        "add": X + Y, "mul": X * Y, "sub": X - Y, "div": X / Y,
+        "maximum": np.maximum(X, Y),
+        "scale": 2.0 * X, "shift": X - 3.0, "rsub": 3.0 - X,
+        "neg": -X, "sq": X ** 2, "sdiv": X / 4.0,
+    }
+    for k, w in want.items():
+        np.testing.assert_allclose(out[k], w, rtol=1e-6, atol=1e-6,
+                                   err_msg=k)
+
+
+def test_elementwise_requires_aligned_labels():
+    x = ein.tensor("x", "i j", (4, 5))
+    y = ein.tensor("y", "j i", (5, 4))
+    with pytest.raises(ValueError, match="elementwise"):
+        _ = x + y
+
+
+# ---------------------------------------------------------------------------
+# Name-keyed feeds at the IR layer (eval_graph_dense / engine.run)
+# ---------------------------------------------------------------------------
+
+
+def _small_graph():
+    g = EinGraph("nk")
+    a = g.input("A", "ij", (4, 8))
+    b = g.input("B", "jk", (8, 2))
+    z = g.einsum("ij,jk->ik", a, b)
+    return g, a, b, z
+
+
+def test_name_keyed_feeds_dense_and_engine():
+    g, a, b, z = _small_graph()
+    A = RNG.normal(size=(4, 8)).astype(np.float32)
+    B = RNG.normal(size=(8, 2)).astype(np.float32)
+    by_name = {"A": A, "B": B}
+    by_id = {a: A, b: B}
+    np.testing.assert_array_equal(eval_graph_dense(g, by_name)[z],
+                                  eval_graph_dense(g, by_id)[z])
+    np.testing.assert_array_equal(np.asarray(engine.run(g, by_name)[z]),
+                                  np.asarray(engine.run(g, by_id)[z]))
+    # mixed keys resolve too
+    np.testing.assert_array_equal(
+        np.asarray(engine.run(g, {"A": A, b: B})[z]),
+        np.asarray(engine.run(g, by_id)[z]))
+
+
+def test_resolve_feeds_errors():
+    g, a, b, _ = _small_graph()
+    A = np.zeros((4, 8), np.float32)
+    B = np.zeros((8, 2), np.float32)
+    with pytest.raises(KeyError, match="unknown input name"):
+        resolve_feeds(g, {"A": A, "nope": B})
+    with pytest.raises(ValueError, match="missing feeds"):
+        resolve_feeds(g, {"A": A})
+    # ambiguous names are an error only when actually used as keys
+    g2 = EinGraph("dup")
+    x1 = g2.input("w", "i", (4,))
+    x2 = g2.input("w", "i", (4,))
+    g2.einsum("i,i->i", x1, x2, combine="add", agg="")
+    W = np.ones(4, np.float32)
+    assert set(resolve_feeds(g2, {x1: W, x2: W})) == {x1, x2}
+    with pytest.raises(ValueError, match="ambiguous"):
+        resolve_feeds(g2, {"w": W, x2: W})
+
+
+# ---------------------------------------------------------------------------
+# Program lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_program_multi_output_and_named_io():
+    A, B, C, Z = _chain_exprs()
+    prog = ein.Program({"Z": Z})
+    assert prog.input_names == ("A", "B", "C")
+    run = prog.compile(p=4)
+    feeds = {"A": RNG.normal(size=(16, 32)).astype(np.float32),
+             "B": RNG.normal(size=(32, 8)).astype(np.float32),
+             "C": RNG.normal(size=(8, 4)).astype(np.float32)}
+    out = run(feeds)
+    np.testing.assert_allclose(
+        out["Z"], feeds["A"] @ feeds["B"] @ feeds["C"], rtol=1e-4, atol=1e-4)
+    # keyword form and multi-output (intermediate + final)
+    prog2 = ein.Program([Z])          # named after the expression
+    assert prog2.output_names == ("Z",)
+    AB = Z  # any expression (incl. intermediates) can be an output
+    multi = ein.Program({"Z": Z, "also": AB}).compile(jit=False)
+    res = multi(**feeds)
+    assert set(res) == {"Z", "also"}
+    np.testing.assert_array_equal(np.asarray(res["Z"]),
+                                  np.asarray(res["also"]))
+
+
+def test_program_compile_plans_through_cache():
+    *_, Z = _chain_exprs()
+    prog = ein.Program({"Z": Z})
+    cache = PlanCache()
+    r1 = prog.compile(p=8, cache=cache)
+    assert cache.misses == 1 and cache.hits == 0
+    r2 = prog.compile(p=8, cache=cache)
+    assert cache.hits == 1
+    assert r2.plan.d_by_node == r1.plan.d_by_node
+    # an isomorphic program (fresh labels) is also a hit
+    A = ein.tensor("A", "p q", (16, 32))
+    B = ein.tensor("B", "q r", (32, 8))
+    C = ein.tensor("C", "r t", (8, 4))
+    Z2 = ein.einsum("p q, q r -> p r", A, B)
+    Z2 = ein.einsum("p r, r t -> p t", Z2, C)
+    ein.Program({"Z": Z2}).compile(p=8, cache=cache)
+    assert cache.hits == 2
+    with pytest.raises(ValueError, match="nothing to plan"):
+        prog.compile(cache=cache)
+
+
+def test_program_compile_mesh_mode_executes_sharded():
+    from repro.launch.mesh import make_host_mesh
+
+    *_, Z = _chain_exprs()
+    run = ein.Program({"Z": Z}).compile(mesh=make_host_mesh((1, 1)))
+    assert run.plan.mode == "mesh"
+    feeds = {"A": RNG.normal(size=(16, 32)).astype(np.float32),
+             "B": RNG.normal(size=(32, 8)).astype(np.float32),
+             "C": RNG.normal(size=(8, 4)).astype(np.float32)}
+    np.testing.assert_allclose(run(feeds)["Z"],
+                               feeds["A"] @ feeds["B"] @ feeds["C"],
+                               rtol=1e-4, atol=1e-4)
+    pol = run.policy()
+    for axes in pol.label_axes.values():
+        assert set(axes) <= {"data", "model"}
+
+
+def test_program_lower_introspection():
+    *_, Z = _chain_exprs()
+    run = ein.Program({"Z": Z}).compile(p=4)
+    low = run.lower()
+    assert low.plan is run.plan
+    txt = low.as_text()
+    assert "plan: p=4" in txt and "outputs: Z=" in txt
+    # without planning inputs there is no plan (and no policy)
+    bare = ein.Program({"Z": Z}).compile()
+    assert bare.plan is None
+    with pytest.raises(ValueError, match="without .* plan|no plan"):
+        bare.policy()
+
+
+def test_program_grad_matches_jax():
+    import jax
+    import jax.numpy as jnp
+
+    X = ein.tensor("X", "b f", (8, 16))
+    W = ein.tensor("W", "f h", (16, 4))
+    Y = ein.tensor("Y", "b h", (8, 4))
+    p = ein.einsum("b f, f h -> b h", X, W).map("relu")
+    loss = ein.einsum("b h -> ", (p - Y) ** 2, agg="sum")
+    grun = ein.Program({"loss": loss}).grad(wrt="W").compile(p=2)
+    feeds = {"X": RNG.normal(size=(8, 16)).astype(np.float32),
+             "W": RNG.normal(size=(16, 4)).astype(np.float32) * 0.1,
+             "Y": RNG.normal(size=(8, 4)).astype(np.float32)}
+    res = grun(feeds)  # dLoss_seed defaults to ones
+
+    def ref(w):
+        return jnp.sum((jnp.maximum(feeds["X"] @ w, 0) - feeds["Y"]) ** 2)
+
+    np.testing.assert_allclose(res["grad_W"], jax.grad(ref)(feeds["W"]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(res["loss"], ref(feeds["W"]), rtol=1e-5)
+
+
+def test_program_feed_errors():
+    *_, Z = _chain_exprs()
+    run = ein.Program({"Z": Z}).compile(jit=False)
+    A = np.zeros((16, 32), np.float32)
+    with pytest.raises(ValueError, match="missing feeds"):
+        run({"A": A})
+    with pytest.raises(KeyError, match="unknown inputs"):
+        run({"A": A, "B": A, "C": A, "D": A})
+    with pytest.raises(KeyError, match="grad: unknown inputs"):
+        ein.Program({"Z": Z}).grad(wrt=["nope"])
