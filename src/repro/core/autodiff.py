@@ -25,7 +25,12 @@ import jax.numpy as jnp
 from repro.core import engine
 from repro.core.einsum import EinGraph, EinSpec
 
-# local derivatives for map nodes: name -> name of the derivative map
+# local derivatives for map nodes: name -> name of the derivative map.
+# Every *elementwise* op in engine.MAP_FNS must have an entry — grad_graph
+# raises KeyError-shaped NotImplementedError otherwise (the neg/add_const
+# regression: registered map ops nobody could differentiate through).
+# softmax_last is deliberately absent: its Jacobian is not diagonal, so it
+# is not GRAD_MAPS-eligible (grad_graph raises NotImplementedError).
 GRAD_MAPS = {
     "relu": "relu_grad",
     "relu2": "relu2_grad",
@@ -37,6 +42,10 @@ GRAD_MAPS = {
     "scale": "scale_grad",
     "id": "one",
     "gelu": "gelu_grad",
+    "neg": "neg_one",      # d/dx (-x) = -1
+    "add_const": "one",    # d/dx (x + c) = 1
+    "rsqrt_eps": "rsqrt_eps_grad",
+    "cast_f32": "one",
 }
 
 engine.MAP_FNS.update({
@@ -48,8 +57,12 @@ engine.MAP_FNS.update({
     * (1 - jax.nn.sigmoid(jnp.asarray(x))),
     "two_x": lambda x: 2 * jnp.asarray(x),
     "scale_grad": lambda x, c=1.0: jnp.full_like(jnp.asarray(x), c),
-    "one": lambda x: jnp.ones_like(jnp.asarray(x)),
+    "one": lambda x, **_: jnp.ones_like(jnp.asarray(x)),
     "gelu_grad": lambda x: jax.grad(lambda v: jnp.sum(jax.nn.gelu(v)))(jnp.asarray(x)),
+    "neg_one": lambda x: jnp.full_like(jnp.asarray(x), -1),
+    # d/dx (x + eps)^(-1/2) = -1/2 (x + eps)^(-3/2)
+    "rsqrt_eps_grad": lambda x, eps=1e-6: (
+        -0.5 * jax.lax.rsqrt(jnp.asarray(x) + eps) / (jnp.asarray(x) + eps)),
 })
 
 engine.OPAQUE_FNS["broadcast_to"] = lambda x, labels=(), shape=(), src_labels=(): (

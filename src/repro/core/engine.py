@@ -218,13 +218,32 @@ def run(
     return vals
 
 
+#: executors ``make_runner`` / ``Program.compile`` can build:
+#:   gspmd     — per-node ``with_sharding_constraint`` hints; XLA's
+#:               partitioner chooses the realized collective schedule.
+#:   shard_map — core/spmd.py: the plan's TRA dataflow emitted literally as
+#:               named collectives inside one ``jax.shard_map``.
+EXECUTORS = ("gspmd", "shard_map")
+
+
 def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
                 plan=None, mesh: Mesh | None = None, cache=None,
                 mesh_axes: dict[str, int] | None = None, p: int | None = None,
                 cost_mode: str = "paper",
-                offpath_repart: bool = True) -> Callable:
+                offpath_repart: bool = True,
+                executor: str = "gspmd",
+                collective_trace=None) -> Callable:
     """Build a jit-able ``f(feed_list) -> outputs`` for the graph.  Feeds are
     passed positionally in input-node order (differentiable wrt any of them).
+
+    ``executor`` selects how the plan is realized (see ``EXECUTORS``):
+    ``"gspmd"`` (default) applies sharding constraints and lets XLA pick the
+    collectives; ``"shard_map"`` emits the plan's join→agg→repartition
+    dataflow as explicit collectives (requires a mesh-mode plan and a mesh —
+    a bare ``mesh`` therefore self-plans under shard_map, where the gspmd
+    executor would run unconstrained).
+    ``collective_trace`` (a ``core.spmd.CollectiveTrace``) receives the
+    static collective schedule of the shard_map executor at build time.
 
     If no ``plan`` is given but planning inputs are (``p``, ``mesh_axes``,
     or a ``mesh`` together with a ``cache``), the runner plans the graph
@@ -238,13 +257,20 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
     ``offpath_repart``) are then ignored, and in particular the cache is
     not warmed with a caller-provided plan (its planning inputs are
     unknown, so no sound cache key exists for it)."""
+    if executor not in EXECUTORS:
+        raise ValueError(f"make_runner: unknown executor {executor!r}; "
+                         f"choose from {EXECUTORS}")
+    if collective_trace is not None and executor != "shard_map":
+        raise ValueError("make_runner: collective_trace is only produced by "
+                         "the shard_map executor")
     if (plan is None and cache is not None and mesh is None
             and p is None and mesh_axes is None):
         raise ValueError(
             "make_runner: cache given but nothing to plan with — pass "
             "mesh, mesh_axes, or p")
     if plan is None and (p is not None or mesh_axes is not None
-                         or (cache is not None and mesh is not None)):
+                         or (cache is not None and mesh is not None)
+                         or (executor == "shard_map" and mesh is not None)):
         from repro.core.decomp import eindecomp
 
         if mesh is None and cache is None:
@@ -261,6 +287,21 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
                          offpath_repart=offpath_repart, cache=cache)
     in_ids = g.input_ids()
     out_ids = list(out_ids) if out_ids is not None else g.outputs()
+
+    if executor == "shard_map":
+        from repro.core import spmd
+
+        if mesh is None or plan is None:
+            raise ValueError("make_runner: executor='shard_map' needs a "
+                             "mesh and a (mesh-mode) plan")
+        mapped = spmd.make_spmd_runner(g, out_ids, plan=plan, mesh=mesh,
+                                       trace=collective_trace)
+
+        def f_spmd(*arrays):
+            outs = mapped(*arrays)
+            return outs[0] if len(outs) == 1 else outs
+
+        return f_spmd
 
     def f(*arrays):
         feeds = dict(zip(in_ids, arrays))

@@ -1,0 +1,665 @@
+"""Explicit-collective SPMD executor: the TRA rewrite executed literally.
+
+The GSPMD engine (core/engine.py) only *hints* the EinDecomp dataflow to XLA
+via ``with_sharding_constraint`` — the partitioner is then free to realize a
+different repartition schedule than the one the §8 DP priced.  This module
+closes that gap: a planned ``EinGraph`` lowers to **one**
+``shard_map``-ped function over the mesh in which every data movement the
+§4.3 join→agg→repartition rewrite implies is emitted as an explicit named
+collective:
+
+  * the *join* is the per-device local block computation (2-ary contractions
+    route through ``repro.kernels.ops.matmul`` so the Pallas kernel runs
+    per-shard on TPU; everything else lowers through the engine's einsum
+    semantics on local blocks);
+  * the *aggregation* over mesh-mapped contracted labels is ``lax.psum``
+    (or ``pmax``/``pmin``; ``prod`` gathers then reduces) on exactly the
+    axes the plan assigned — fused to ``lax.psum_scatter`` when every
+    consumer wants the reduced output sharded on the same axis;
+  * inter-node *repartitions* are derived statically from
+    ``(d_from, d_to)``: un-sharding a dimension is ``lax.all_gather``,
+    moving a mesh axis between dimensions is ``lax.all_to_all``, swapping
+    which axis shards a dimension is ``lax.ppermute``, and sharding a
+    replicated dimension is a free local slice.
+
+Because the whole schedule is a pure function of (graph, plan, mesh shape),
+it is computed **before tracing**: ``build_schedule`` returns the per-node
+collective program plus a ``CollectiveTrace`` (count + wire bytes per
+collective kind) without touching a single array — the instrumentation the
+``bench_spmd`` benchmark compares against the §7 ``plan_cost`` prediction.
+
+Opaque nodes (flash attention, MoE dispatch, recurrent scans) execute
+replicated in this executor: their inputs are gathered, the fused op runs
+densely on every device, and consumers re-slice locally.  Dispatching them
+per-shard (ring attention, a2a expert parallelism) is the documented
+follow-on (ROADMAP).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.einsum import EinGraph, EinSpec, Node
+
+#: a layout maps each tensor dimension to the (major→minor) mesh axes that
+#: shard it — the executor-side mirror of a PartitionSpec.
+Layout = tuple[tuple[str, ...], ...]
+
+#: collective kinds that move data over the wire (local slices are free).
+WIRE_KINDS = ("all_gather", "all_to_all", "ppermute", "psum", "psum_scatter",
+              "pmax", "pmin", "gather_reduce")
+
+
+# ---------------------------------------------------------------------------
+# Collective trace
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CollectiveEvent:
+    """One emitted collective: what, where, and how many wire bytes."""
+
+    kind: str                # one of WIRE_KINDS
+    axes: tuple[str, ...]    # mesh axes the collective runs over
+    nid: int                 # graph node the movement belongs to
+    elems: int               # floats crossing the wire, summed over devices
+    nbytes: int              # elems * itemsize
+
+
+class CollectiveTrace:
+    """Count + wire bytes per collective kind for one compiled program.
+
+    Filled statically at schedule-build time (the schedule is a pure
+    function of graph/plan/mesh shape, so no tracing is needed); the same
+    numbers the executed program realizes.  Wire costs use ring pricing —
+    all-gather moves (k-1)·n_loc per device, all-reduce 2·(k-1)/k·n_loc,
+    all-to-all (k-1)/k·n_loc, reduce-scatter (k-1)/k·n_loc, permute n_loc —
+    matching launch/hlo_analysis.py's accounting of the GSPMD path.
+    """
+
+    def __init__(self):
+        self.events: list[CollectiveEvent] = []
+
+    def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
+            nbytes: int) -> None:
+        self.events.append(CollectiveEvent(kind, tuple(axes), nid,
+                                           int(elems), int(nbytes)))
+
+    def extend(self, other: "CollectiveTrace") -> None:
+        self.events.extend(other.events)
+
+    def reset(self) -> None:
+        self.events.clear()
+
+    @property
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    @property
+    def elems_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + e.elems
+        return out
+
+    @property
+    def bytes_by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + e.nbytes
+        return out
+
+    @property
+    def total_elems(self) -> int:
+        return sum(e.elems for e in self.events)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def summary(self) -> str:
+        if not self.events:
+            return "collectives: none (fully local program)"
+        lines = ["collectives (kind: count / wire bytes):"]
+        nb = self.bytes_by_kind
+        for kind, cnt in sorted(self.counts.items()):
+            lines.append(f"  {kind:14s} {cnt:4d}  {nb[kind]:,} B")
+        lines.append(f"  {'total':14s} {len(self.events):4d}  "
+                     f"{self.total_bytes:,} B")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Repartition planning: (d_from, d_to) -> explicit collective steps
+# ---------------------------------------------------------------------------
+#
+# A *step* is a tuple whose head names the op:
+#   ("all_gather", ax, dim)             un-shard dim's minor-most axis
+#   ("all_to_all", ax, src_dim, dst_dim) move ax between dims
+#   ("ppermute", ax_old, ax_new, dim)   swap which axis shards dim
+#   ("slice", ax, dim)                  shard a replicated dim (local, free)
+#   ("psum"|"pmax"|"pmin", axes)        cross-device reduction
+#   ("psum_scatter", ax, dim)           fused reduce + shard of dim
+#   ("gather_reduce", ax, reducer)      gather + local reduce (prod)
+
+
+def plan_repart(src: Layout, dst: Layout) -> list[tuple]:
+    """Decompose a repartition into explicit collective steps.
+
+    Per-axis moves use ``all_to_all`` when the axis is minor-most on both
+    sides, axis swaps on a single dimension use ``ppermute``, and the
+    general fallback is gather-to-prefix + local re-slice — always correct,
+    never silently wrong, at worst pricier than optimal.
+    """
+    if len(src) != len(dst):
+        raise ValueError(f"repartition rank mismatch: {src} vs {dst}")
+    cur = [list(t) for t in src]
+    want = [tuple(t) for t in dst]
+    steps: list[tuple] = []
+
+    def dim_of(ax: str, layout) -> int | None:
+        for d, axes in enumerate(layout):
+            if ax in axes:
+                return d
+        return None
+
+    # 1. all_to_all: ax minor-most at its source dim, lands minor-most at its
+    #    destination dim whose prefix is already in place.
+    changed = True
+    while changed:
+        changed = False
+        for i, axes in enumerate(cur):
+            if not axes:
+                continue
+            ax = axes[-1]
+            j = dim_of(ax, want)
+            if j is None or j == i:
+                continue
+            if want[j] == tuple(cur[j]) + (ax,):
+                steps.append(("all_to_all", ax, i, j))
+                cur[i].pop()
+                cur[j].append(ax)
+                changed = True
+
+    # 2. ppermute: dim stays sharded but by a different (same-size checked by
+    #    the caller) axis, old axis sharding nothing else, new axis idle.
+    for d in range(len(cur)):
+        if (len(cur[d]) == 1 and len(want[d]) == 1
+                and cur[d][0] != want[d][0]
+                and dim_of(want[d][0], cur) is None
+                and dim_of(cur[d][0], want) in (None, d)):
+            steps.append(("ppermute", cur[d][0], want[d][0], d))
+            cur[d] = [want[d][0]]
+
+    # 3. gather: pop minor-most axes until each dim is a prefix of its target.
+    for d in range(len(cur)):
+        while cur[d] and tuple(cur[d]) != want[d][:len(cur[d])]:
+            steps.append(("all_gather", cur[d][-1], d))
+            cur[d].pop()
+
+    # 4. slice: append the remaining target axes major→minor (local, free).
+    for d in range(len(cur)):
+        for ax in want[d][len(cur[d]):]:
+            steps.append(("slice", ax, d))
+            cur[d].append(ax)
+
+    assert [tuple(t) for t in cur] == list(want), (src, dst, steps)
+    return steps
+
+
+def _ppermute_size_ok(step, sizes) -> bool:
+    return sizes[step[1]] == sizes[step[2]]
+
+
+def _plan_repart_sized(src: Layout, dst: Layout,
+                       sizes: dict[str, int]) -> list[tuple]:
+    """plan_repart, demoting any ppermute whose two axes differ in size
+    (the swap is only a pure permutation for equal sizes) to gather+slice."""
+    steps = plan_repart(src, dst)
+    if all(st[0] != "ppermute" or _ppermute_size_ok(st, sizes)
+           for st in steps):
+        return steps
+    out: list[tuple] = []
+    for st in steps:
+        if st[0] == "ppermute" and not _ppermute_size_ok(st, sizes):
+            _, ax_old, ax_new, dim = st
+            out.append(("all_gather", ax_old, dim))
+            out.append(("slice", ax_new, dim))
+        else:
+            out.append(st)
+    return out
+
+
+def local_shape(shape: Sequence[int], layout: Layout,
+                sizes: dict[str, int]) -> tuple[int, ...]:
+    """Per-device block shape of a tensor under a layout."""
+    out = []
+    for s, axes in zip(shape, layout):
+        k = math.prod(sizes[a] for a in axes) if axes else 1
+        if s % k != 0:
+            raise ValueError(f"axes {axes} (x{k}) do not divide dim {s}")
+        out.append(s // k)
+    return tuple(out)
+
+
+def _step_shape(shape: tuple[int, ...], step: tuple,
+                sizes: dict[str, int]) -> tuple[int, ...]:
+    """Local block shape after one repartition step."""
+    s = list(shape)
+    kind = step[0]
+    if kind == "all_gather":
+        s[step[2]] *= sizes[step[1]]
+    elif kind == "all_to_all":
+        _, ax, i, j = step
+        s[i] *= sizes[ax]
+        s[j] //= sizes[ax]
+    elif kind == "slice":
+        s[step[2]] //= sizes[step[1]]
+    elif kind == "psum_scatter":
+        s[step[2]] //= sizes[step[1]]
+    # ppermute / psum / pmax / pmin / gather_reduce keep the block shape
+    return tuple(s)
+
+
+def _wire_elems(step: tuple, shape: tuple[int, ...], sizes: dict[str, int],
+                n_devices: int) -> int:
+    """Ring-priced floats crossing the wire, summed over all devices, for
+    one step applied to local blocks of ``shape``."""
+    n_loc = math.prod(shape) if shape else 1
+    kind = step[0]
+    if kind == "all_gather":
+        k = sizes[step[1]]
+        return n_devices * (k - 1) * n_loc
+    if kind == "all_to_all":
+        k = sizes[step[1]]
+        return n_devices * (k - 1) * n_loc // k
+    if kind == "ppermute":
+        return n_devices * n_loc
+    if kind in ("psum", "pmax", "pmin"):
+        k = math.prod(sizes[a] for a in step[1])
+        return n_devices * 2 * (k - 1) * n_loc // k
+    if kind == "psum_scatter":
+        k = sizes[step[1]]
+        return n_devices * (k - 1) * n_loc // k
+    if kind == "gather_reduce":
+        k = sizes[step[1]]
+        return n_devices * (k - 1) * n_loc
+    return 0  # slice: local
+
+
+# ---------------------------------------------------------------------------
+# Schedule: per-node collective programs + layouts, computed before tracing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NodeProgram:
+    """Everything the body needs to execute one node: per-arg repartition
+    steps, the post-compute reduction/slice steps, and the output layout."""
+
+    nid: int
+    arg_steps: list[list[tuple]] = field(default_factory=list)
+    post_steps: list[tuple] = field(default_factory=list)
+    layout: Layout = ()
+
+
+@dataclass
+class Schedule:
+    """The full static lowering of (graph, plan, mesh shape)."""
+
+    programs: list[NodeProgram]
+    layouts: dict[int, Layout]
+    trace: CollectiveTrace
+    sizes: dict[str, int]
+
+
+def _norm_axes(axes, sizes: dict[str, int]) -> tuple[str, ...]:
+    """Drop size-1 mesh axes — they shard nothing and must not show up as
+    collectives (an all-"None" plan emits zero collectives)."""
+    return tuple(a for a in axes if sizes.get(a, 1) > 1)
+
+
+def _plan_layout(node: Node, axes_by_label: dict[str, tuple[str, ...]],
+                 sizes: dict[str, int]) -> Layout:
+    return tuple(_norm_axes(axes_by_label.get(l, ()), sizes)
+                 for l in node.labels)
+
+
+def _itemsize(dtype) -> int:
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        return 4
+
+
+def _record_steps(trace: CollectiveTrace, steps: list[tuple],
+                  shape: tuple[int, ...], sizes: dict[str, int],
+                  n_devices: int, nid: int, itemsize: int) -> tuple[int, ...]:
+    """Account every step in the trace; returns the final local shape."""
+    for st in steps:
+        kind = st[0]
+        if kind in WIRE_KINDS:
+            if kind in ("psum", "pmax", "pmin"):
+                axes = tuple(st[1])
+            elif kind == "ppermute":
+                axes = (st[1], st[2])
+            else:
+                axes = (st[1],)
+            elems = _wire_elems(st, shape, sizes, n_devices)
+            trace.add(kind, axes, nid, elems, elems * itemsize)
+        shape = _step_shape(shape, st, sizes)
+    return shape
+
+
+def _scatter_dim(g: EinGraph, plan, nid: int, ax: str,
+                 consumers: dict[int, list[int]], out_ids: set[int],
+                 sizes: dict[str, int]) -> int | None:
+    """Output dim to psum_scatter axis ``ax`` onto: defined when every
+    consumer wants exactly that axis on the same output dimension (and the
+    node is not itself a program output, whose layout the plan pins)."""
+    if nid in out_ids or not consumers.get(nid):
+        return None
+    dims: set[int] = set()
+    for m in consumers[nid]:
+        ax_m = plan.axes_by_node.get(m, {})
+        for ls in g.edge_labels(m, nid):
+            found = [d for d, l in enumerate(ls)
+                     if _norm_axes(ax_m.get(l, ()), sizes) == (ax,)]
+            if len(found) != 1:
+                return None
+            dims.add(found[0])
+    return dims.pop() if len(dims) == 1 else None
+
+
+def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
+                   out_ids: Sequence[int] | None = None) -> Schedule:
+    """Lower (graph, plan, mesh shape) to the static collective schedule.
+
+    Pure Python over static shapes — no jax, no devices — so trace
+    assertions (e.g. "an unsharded plan emits zero collectives") run on any
+    host, and the runner body just replays the recorded decisions.
+    """
+    sizes = {a: int(s) for a, s in mesh_axes.items()}
+    n_dev = math.prod(sizes.values()) if sizes else 1
+    out_set = set(out_ids) if out_ids is not None else set(g.outputs())
+    consumers = g.consumers()
+    trace = CollectiveTrace()
+    layouts: dict[int, Layout] = {}
+    programs: list[NodeProgram] = []
+
+    for nid in g.topo_order():
+        n = g.nodes[nid]
+        ax_n = plan.axes_by_node.get(nid, {}) if plan is not None else {}
+        prog = NodeProgram(nid=nid)
+        itemsize = _itemsize(n.dtype)
+
+        if n.kind == "input":
+            prog.layout = _plan_layout(n, ax_n, sizes)
+        elif n.kind == "map":
+            # elementwise on the local block; layout rides through untouched
+            prog.layout = layouts[n.inputs[0]]
+        elif n.kind == "einsum":
+            spec = n.spec
+            for ls, a in zip(spec.in_labels, n.inputs):
+                req = tuple(_norm_axes(ax_n.get(l, ()), sizes) for l in ls)
+                steps = _plan_repart_sized(layouts[a], req, sizes)
+                prog.arg_steps.append(steps)
+                src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+                got = _record_steps(trace, steps, src_shape, sizes, n_dev,
+                                    nid, _itemsize(g.nodes[a].dtype))
+                want_shape = local_shape(g.nodes[a].shape, req, sizes)
+                assert got == want_shape, (nid, a, got, want_shape)
+
+            prog.layout = _plan_layout(n, ax_n, sizes)
+            agg_axes: list[str] = []
+            for l in spec.agg_labels:
+                agg_axes.extend(_norm_axes(ax_n.get(l, ()), sizes))
+            if agg_axes:
+                out_loc = list(local_shape(n.shape, prog.layout, sizes))
+                if spec.agg == "sum":
+                    plain: list[str] = []
+                    for ax in agg_axes:
+                        d = _scatter_dim(g, plan, nid, ax, consumers,
+                                         out_set, sizes)
+                        if d is not None and not prog.layout[d]:
+                            prog.post_steps.append(("psum_scatter", ax, d))
+                            lay = list(prog.layout)
+                            lay[d] = (ax,)
+                            prog.layout = tuple(lay)
+                        else:
+                            plain.append(ax)
+                    if plain:
+                        # reduce first, then scatter the fused axes
+                        prog.post_steps.insert(0, ("psum", tuple(plain)))
+                elif spec.agg in ("max", "min"):
+                    prog.post_steps.append(
+                        ("pmax" if spec.agg == "max" else "pmin",
+                         tuple(agg_axes)))
+                else:  # prod: gather partial products, reduce locally
+                    for ax in agg_axes:
+                        prog.post_steps.append(("gather_reduce", ax, "prod"))
+                _record_steps(trace, prog.post_steps, tuple(out_loc), sizes,
+                              n_dev, nid, itemsize)
+        else:  # opaque: gather to replicated, run dense, re-slice to plan
+            for a in n.inputs:
+                replicated = tuple(() for _ in g.nodes[a].shape)
+                steps = plan_repart(layouts[a], replicated)
+                prog.arg_steps.append(steps)
+                src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+                _record_steps(trace, steps, src_shape, sizes, n_dev, nid,
+                              _itemsize(g.nodes[a].dtype))
+            prog.layout = _plan_layout(n, ax_n, sizes)
+            prog.post_steps = plan_repart(tuple(() for _ in n.shape),
+                                          prog.layout)
+            # post steps are pure slices (replicated -> sharded): free
+
+        layouts[nid] = prog.layout
+        programs.append(prog)
+
+    return Schedule(programs=programs, layouts=layouts, trace=trace,
+                    sizes=sizes)
+
+
+# ---------------------------------------------------------------------------
+# Local einsum compute: contraction -> kernels.ops.matmul when it is one
+# ---------------------------------------------------------------------------
+
+
+def _as_matmul(spec: EinSpec) -> tuple[list[str], list[str], list[str]] | None:
+    """(free_x, contracted, free_y) when the node is a clean matmul: binary
+    mul+sum, the shared labels are exactly the contracted ones (no batch
+    labels), every label partitions into one of the three groups."""
+    if not (spec.is_contraction and len(spec.in_labels) == 2):
+        return None
+    lx, ly = spec.in_labels
+    shared = [l for l in lx if l in ly]
+    if set(shared) != set(spec.agg_labels):
+        return None
+    free_x = [l for l in lx if l not in shared]
+    free_y = [l for l in ly if l not in shared]
+    if set(spec.out_labels) != set(free_x) | set(free_y):
+        return None
+    return free_x, shared, free_y
+
+
+def local_einsum(spec: EinSpec, x, y=None):
+    """One node's *local* join block.  Clean 2-ary contractions go through
+    ``repro.kernels.ops.matmul`` (Pallas per shard on TPU, jnp.dot
+    elsewhere); everything else lowers through the engine semantics."""
+    import jax.numpy as jnp
+
+    from repro.core import engine
+
+    args = (x,) if y is None else (x, y)
+    mm = _as_matmul(spec) if y is not None else None
+    if mm is not None and all(jnp.issubdtype(a.dtype, jnp.floating)
+                              for a in args):
+        from repro.kernels import ops
+
+        free_x, shared, free_y = mm
+        lx, ly = spec.in_labels
+        xa = jnp.transpose(x, [lx.index(l) for l in free_x + shared])
+        ya = jnp.transpose(y, [ly.index(l) for l in shared + free_y])
+        fx_shape = xa.shape[:len(free_x)]
+        fy_shape = ya.shape[len(shared):]
+        k = math.prod(xa.shape[len(free_x):])  # 1 for outer products
+        z = ops.matmul(xa.reshape(-1, k), ya.reshape(k, -1))
+        z = z.reshape(tuple(fx_shape) + tuple(fy_shape))
+        order = free_x + free_y
+        return jnp.transpose(z, [order.index(l) for l in spec.out_labels])
+    return engine.lower_einsum(spec, *args)
+
+
+# ---------------------------------------------------------------------------
+# Step execution inside the shard_map body
+# ---------------------------------------------------------------------------
+
+
+def _run_steps(x, steps: list[tuple], sizes: dict[str, int]):
+    import jax.numpy as jnp
+    from jax import lax
+
+    for st in steps:
+        kind = st[0]
+        if kind == "all_gather":
+            x = lax.all_gather(x, st[1], axis=st[2], tiled=True)
+        elif kind == "all_to_all":
+            _, ax, src_dim, dst_dim = st
+            x = lax.all_to_all(x, ax, split_axis=dst_dim,
+                               concat_axis=src_dim, tiled=True)
+        elif kind == "ppermute":
+            _, ax_old, ax_new, _dim = st
+            k = sizes[ax_old]
+            # device (old=i, new=j) must end up with block j — sourced from
+            # (old=j, new=i); linear index over (ax_old, ax_new) is row-major
+            perm = [(j * k + i, i * k + j)
+                    for i in range(k) for j in range(k)]
+            x = lax.ppermute(x, (ax_old, ax_new), perm)
+        elif kind == "slice":
+            _, ax, dim = st
+            k = sizes[ax]
+            sz = x.shape[dim] // k
+            x = lax.dynamic_slice_in_dim(x, lax.axis_index(ax) * sz, sz,
+                                         axis=dim)
+        elif kind == "psum":
+            x = lax.psum(x, tuple(st[1]))
+        elif kind == "pmax":
+            x = lax.pmax(x, tuple(st[1]))
+        elif kind == "pmin":
+            x = lax.pmin(x, tuple(st[1]))
+        elif kind == "psum_scatter":
+            x = lax.psum_scatter(x, st[1], scatter_dimension=st[2],
+                                 tiled=True)
+        elif kind == "gather_reduce":
+            if st[2] != "prod":  # the only agg without a ring collective
+                raise ValueError(f"gather_reduce reducer {st[2]!r} unknown")
+            x = lax.all_gather(x, st[1], axis=0, tiled=False)
+            x = jnp.prod(x, axis=0)
+        else:
+            raise ValueError(f"unknown step {st}")
+    return x
+
+
+def _pspec(layout: Layout):
+    from jax.sharding import PartitionSpec as P
+
+    entries = []
+    for axes in layout:
+        if not axes:
+            entries.append(None)
+        elif len(axes) == 1:
+            entries.append(axes[0])
+        else:
+            entries.append(tuple(axes))
+    return P(*entries)
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking off (manual
+    axis_index slicing defeats the rep checker by design)."""
+    try:
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except (ImportError, TypeError):  # pragma: no cover - newer jax
+        from jax import shard_map
+
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+
+def make_spmd_runner(
+    g: EinGraph,
+    out_ids: Sequence[int] | None = None,
+    *,
+    plan,
+    mesh,
+    trace: CollectiveTrace | None = None,
+) -> Callable:
+    """Build ``f(*input_arrays) -> tuple(outputs)`` executing the planned
+    graph as one ``shard_map`` with explicit collectives.
+
+    Requires a mesh-mode plan (``plan.axes_by_node``); ``trace`` (optional)
+    receives the static ``CollectiveEvent`` schedule at build time.
+    Jit-able and differentiable like the GSPMD runner.
+    """
+    from repro.core import engine
+
+    if plan is None or mesh is None:
+        raise ValueError("make_spmd_runner: shard_map execution needs both "
+                         "a plan and a mesh")
+    if plan.mode != "mesh":
+        raise ValueError(
+            f"make_spmd_runner: plan mode {plan.mode!r} is not mesh-mode — "
+            "plan with mesh_axes so labels map to named mesh axes")
+    out_ids = list(out_ids) if out_ids is not None else g.outputs()
+    sizes = engine.mesh_axes_dict(mesh)
+    sched = build_schedule(g, plan, sizes, out_ids)
+    if trace is not None:
+        trace.extend(sched.trace)
+
+    in_ids = g.input_ids()
+    in_specs = tuple(_pspec(sched.layouts[i]) for i in in_ids)
+    out_specs = tuple(_pspec(sched.layouts[o]) for o in out_ids)
+    progs = {p.nid: p for p in sched.programs}
+
+    def body(*local_inputs):
+        import jax.numpy as jnp
+
+        vals: dict[int, Any] = {}
+        for i, arr in zip(in_ids, local_inputs):
+            vals[i] = jnp.asarray(arr)
+        for nid in g.topo_order():
+            n = g.nodes[nid]
+            if n.kind == "input":
+                continue
+            prog = progs[nid]
+            args = [_run_steps(vals[a], steps, sched.sizes)
+                    for a, steps in zip(n.inputs, prog.arg_steps)]
+            if n.kind == "einsum":
+                v = local_einsum(n.spec, *args)
+                v = _run_steps(v, prog.post_steps, sched.sizes)
+            elif n.kind == "map":
+                v = engine.MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
+            else:
+                v = engine.OPAQUE_FNS[n.op](*args, **n.call_params)
+                v = _run_steps(v, prog.post_steps, sched.sizes)
+            vals[nid] = v
+        return tuple(vals[o] for o in out_ids)
+
+    return _shard_map(body, mesh, in_specs, out_specs)

@@ -129,7 +129,7 @@ class Program:
     def compile(self, *, mesh=None, mesh_axes: dict[str, int] | None = None,
                 p: int | None = None, cost_model: str = "paper",
                 cache=None, offpath_repart: bool = True,
-                jit: bool = True) -> "CompiledProgram":
+                executor: str = "gspmd", jit: bool = True) -> "CompiledProgram":
         """Run EinDecomp (through the plan cache) and build the runner.
 
         Planning inputs mirror ``eindecomp``/``make_runner``: a jax ``mesh``
@@ -139,16 +139,29 @@ class Program:
         means no planning at all — a plain jit-compiled runner.  ``cache``
         is a ``PlanCache`` or a path to its JSON store; a hit skips the §8
         DP entirely.  ``cost_model`` is ``"paper"`` or ``"collective"``.
+
+        ``executor`` picks how the plan is realized (``engine.EXECUTORS``):
+        ``"gspmd"`` lowers to sharding-constraint hints, ``"shard_map"``
+        emits the plan's join→agg→repartition dataflow as explicit
+        collectives (core/spmd.py; requires a ``mesh``).  The shard_map
+        executor's static collective schedule is exposed as
+        ``CompiledProgram.collectives``.
         """
         from repro.core.decomp import CostModel, eindecomp
-        from repro.core.engine import mesh_axes_dict
+        from repro.core.engine import EXECUTORS, mesh_axes_dict
         from repro.core.plancache import PlanCache
 
+        if executor not in EXECUTORS:
+            raise ValueError(f"compile: unknown executor {executor!r}; "
+                             f"choose from {EXECUTORS}")
         cache = PlanCache.coerce(cache)
         if isinstance(cost_model, CostModel):
             cost_model = cost_model.mode
         if mesh is not None and mesh_axes is None:
             mesh_axes = mesh_axes_dict(mesh)
+        if executor == "shard_map" and mesh is None:
+            raise ValueError("compile: executor='shard_map' needs a jax "
+                             "mesh (mesh_axes alone cannot place shards)")
         plan = None
         if mesh_axes is not None or p is not None:
             if p is None:
@@ -159,7 +172,8 @@ class Program:
         elif cache is not None:
             raise ValueError("compile: cache given but nothing to plan "
                              "with — pass mesh, mesh_axes, or p")
-        return CompiledProgram(self, plan=plan, mesh=mesh, jit=jit)
+        return CompiledProgram(self, plan=plan, mesh=mesh, jit=jit,
+                               executor=executor)
 
 
 class CompiledProgram:
@@ -168,11 +182,14 @@ class CompiledProgram:
     ``run({"x": X, ...})`` (or keyword form ``run(x=X, ...)``) returns
     ``{output name: array}``.  ``.plan`` is the EinDecomp result (None if
     compiled without planning inputs), ``.lower()`` the introspection
-    surface, ``.policy()`` the production ShardingPolicy.
+    surface, ``.policy()`` the production ShardingPolicy.  ``.executor``
+    names the execution strategy; for ``"shard_map"``, ``.collectives`` is
+    the static ``CollectiveTrace`` (count + wire bytes per collective kind)
+    the program will execute — for ``"gspmd"`` it is None (XLA decides).
     """
 
     def __init__(self, program: Program, *, plan=None, mesh=None,
-                 jit: bool = True):
+                 jit: bool = True, executor: str = "gspmd"):
         import jax
 
         from repro.core import engine
@@ -180,6 +197,8 @@ class CompiledProgram:
         self.program = program
         self.plan = plan
         self.mesh = mesh
+        self.executor = executor
+        self.collectives = None
         g = program.graph
         self._in_ids = g.input_ids()
         self._in_names = tuple(g.nodes[i].name for i in self._in_ids)
@@ -187,10 +206,17 @@ class CompiledProgram:
         out_ids = [program._out[k] for k in self._out_names]
         in_ids = self._in_ids
 
-        def _positional(*arrays):
-            vals = engine.run(g, dict(zip(in_ids, arrays)),
-                              plan=plan, mesh=mesh)
-            return tuple(vals[o] for o in out_ids)
+        if executor == "shard_map":
+            from repro.core import spmd
+
+            self.collectives = spmd.CollectiveTrace()
+            _positional = spmd.make_spmd_runner(
+                g, out_ids, plan=plan, mesh=mesh, trace=self.collectives)
+        else:
+            def _positional(*arrays):
+                vals = engine.run(g, dict(zip(in_ids, arrays)),
+                                  plan=plan, mesh=mesh)
+                return tuple(vals[o] for o in out_ids)
 
         self._fn = jax.jit(_positional) if jit else _positional
 

@@ -1,7 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
 
 For every (architecture x input-shape) cell and mesh:
@@ -30,8 +26,13 @@ from them by benchmarks/roofline.py.
 import argparse
 import dataclasses
 import json
+import os
 import time
 import traceback
+
+from repro.launch.hostdev import force_host_devices as _force_host_devices
+
+_force_host_devices()
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,37 @@
+"""Forcing a multi-device host platform, politely.
+
+``--xla_force_host_platform_device_count`` only takes effect if it is in
+``XLA_FLAGS`` *before* jax initializes its backends.  This helper appends it
+(never clobbering a user-set ``XLA_FLAGS``, never duplicating the flag) and
+skips the mutation when jax's backends are already up — at that point the
+env var would silently do nothing, so the honest move is to leave the
+environment untouched.
+
+jax-free on purpose: callers (launch/dryrun.py, benchmarks/bench_spmd.py)
+import it before their first ``import jax``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def force_host_devices(n: int = 512) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``
+    unless the flag is already set or jax can no longer honor it."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    if "jax" in sys.modules:
+        try:
+            from jax._src import xla_bridge
+
+            if xla_bridge.backends_are_initialized():
+                return  # too late: the env var would be ignored
+        except (ImportError, AttributeError):
+            # private API moved: set the flag anyway — harmless if backends
+            # are already up (ignored), required if they are not
+            pass
+    os.environ["XLA_FLAGS"] = (
+        (f"{flags} " if flags else "")
+        + f"--xla_force_host_platform_device_count={n}")

@@ -25,8 +25,8 @@ from repro.models.eingraphs import program_for
 
 
 def _ring_pack(cache_kv: KVCache, prompt_len: int, window: int) -> KVCache:
-    """Re-pack a prefill cache (time-ordered) into decode ring order."""
-    S = cache_kv.k.shape[2]  # (L, b, S, kh, hd) stacked per unit
+    """Re-pack a prefill cache (time-ordered) into decode ring order.
+    Layout is (L, b, S, kh, hd) stacked per unit."""
     take = min(window, prompt_len)
     slots = (prompt_len - take + np.arange(take)) % window
 
@@ -58,15 +58,47 @@ def prepare_decode_caches(cfg, prefill_caches, prompt_len: int, kv_len: int):
     return out
 
 
+def decode_loop(decode, params, caches, first_tok, prompt_len: int,
+                max_new: int):
+    """Greedy decode: ``max_new`` tokens total — the prefill's argmax plus
+    ``max_new - 1`` decode steps, every step's logits consumed.
+
+    (The historical loop appended the prefill token first but still ran
+    ``max_new`` decode steps, so the final call's logits were computed and
+    thrown away — one wasted step per request, and a tok/s figure counting
+    a token the decode path never produced.)
+
+    Returns ``(generations (b, max_new) int32, caches, decode_steps)``.
+    """
+    b = first_tok.shape[0]
+    if max_new <= 0:
+        return np.zeros((b, 0), np.int32), caches, 0
+    outs = [np.asarray(first_tok)[:, 0]]
+    tok = first_tok
+    steps = 0
+    for i in range(max_new - 1):
+        logits, caches = decode(params, tok, caches, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(tok)[:, 0])
+        steps += 1
+    return np.stack(outs, axis=1), caches, steps
+
+
 def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
           kv_len: int | None = None, params=None, greedy: bool = True,
-          seed: int = 0, plan_cache=None):
+          seed: int = 0, plan_cache=None, executor: str = "gspmd"):
     """prompts: (b, prompt_len) int32.  Returns (b, max_new) generations.
 
     ``plan_cache`` is a ``core.plancache.PlanCache`` or a path to its JSON
     store: the planner warm-starts from it (a structurally identical graph
     planned by any earlier process is a cache hit, skipping the §8 DP) and
-    persists the plan it used for the next restart."""
+    persists the plan it used for the next restart.
+
+    ``executor`` selects how the cell's Program realizes its plan
+    (``engine.EXECUTORS``); with ``"shard_map"`` the compiled program's
+    static collective schedule is printed (the serving steps themselves
+    still run the production transformer stack under the derived policy).
+    """
     mesh = mesh or make_host_mesh()
     b, prompt_len = prompts.shape
     kv_len = kv_len or (cfg.kv_len(ShapeConfig("serve", "decode",
@@ -75,8 +107,12 @@ def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
     # declare -> trace -> decompose (through the plan cache) -> project:
     # the serving path runs entirely on the Program surface.
     compiled = program_for(cfg, shape).compile(
-        mesh_axes=mesh_axes_dict(mesh), cache=plan_cache)
+        mesh_axes=mesh_axes_dict(mesh), cache=plan_cache,
+        mesh=mesh if executor == "shard_map" else None, executor=executor)
     policy = compiled.policy()
+    if compiled.collectives is not None:
+        print(f"[serve] shard_map executor schedule for {cfg.name}:")
+        print(compiled.collectives.summary())
 
     if params is None:
         params = tf.init_params(cfg, jax.random.PRNGKey(seed))
@@ -91,17 +127,14 @@ def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
     caches = prepare_decode_caches(cfg, caches, prompt_len, kv_len)
     t_prefill = time.time() - t0
 
-    outs = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     t0 = time.time()
-    for i in range(max_new):
-        outs.append(np.asarray(tok)[:, 0])
-        logits, caches = decode(params, tok, caches, jnp.int32(prompt_len + i))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    gen, caches, decode_steps = decode_loop(decode, params, caches, tok,
+                                            prompt_len, max_new)
     t_decode = time.time() - t0
-    gen = np.stack(outs, axis=1)
     return gen, {"t_prefill_s": t_prefill, "t_decode_s": t_decode,
-                 "tok_per_s": b * max_new / max(t_decode, 1e-9)}
+                 "decode_steps": decode_steps,
+                 "tok_per_s": b * decode_steps / max(t_decode, 1e-9)}
 
 
 def main() -> None:
@@ -114,6 +147,11 @@ def main() -> None:
     ap.add_argument("--plan-cache", default=None,
                     help="path to a persistent plan-cache JSON store; "
                          "warm-starts the planner across restarts")
+    ap.add_argument("--executor", default="gspmd",
+                    choices=["gspmd", "shard_map"],
+                    help="plan realization: GSPMD sharding hints, or the "
+                         "explicit-collective shard_map executor "
+                         "(prints its static collective schedule)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -123,7 +161,7 @@ def main() -> None:
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
     gen, stats = serve(cfg, prompts, max_new=args.max_new,
-                       plan_cache=args.plan_cache)
+                       plan_cache=args.plan_cache, executor=args.executor)
     print("generations:\n", gen)
     print(stats)
 

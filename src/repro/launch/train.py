@@ -38,16 +38,21 @@ from repro.optim.schedules import cosine_schedule, wsd_schedule
 def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
           mesh=None, ckpt_dir: str | None = None, ckpt_every: int = 50,
           schedule: str = "cosine", peak_lr: float = 3e-4,
-          log_every: int = 10, seed: int = 0, plan_cache=None) -> dict:
+          log_every: int = 10, seed: int = 0, plan_cache=None,
+          executor: str = "gspmd") -> dict:
     mesh = mesh or make_host_mesh()
     axes = mesh_axes_dict(mesh)
     # warm-start planning from the persistent cache: on restart (or elastic
     # reshard onto a mesh some earlier job already planned) the §8 DP is a
     # cache hit instead of a re-run.  The training path runs on the Program
     # surface: declare -> trace -> decompose (cached) -> project to policy.
-    compiled = program_for(cfg, shape).compile(mesh_axes=axes,
-                                               cache=plan_cache)
+    compiled = program_for(cfg, shape).compile(
+        mesh_axes=axes, cache=plan_cache,
+        mesh=mesh if executor == "shard_map" else None, executor=executor)
     policy = compiled.policy(fsdp_axes=fsdp_axes_for(axes))
+    if compiled.collectives is not None:
+        print(f"[train] shard_map executor schedule for {cfg.name}:")
+        print(compiled.collectives.summary())
 
     if schedule == "wsd":
         lr_fn = lambda s: wsd_schedule(s, peak_lr=peak_lr,
@@ -123,6 +128,11 @@ def main() -> None:
     ap.add_argument("--plan-cache", default=None,
                     help="path to a persistent plan-cache JSON store; "
                          "warm-starts the planner across restarts")
+    ap.add_argument("--executor", default="gspmd",
+                    choices=["gspmd", "shard_map"],
+                    help="plan realization: GSPMD sharding hints, or the "
+                         "explicit-collective shard_map executor "
+                         "(prints its static collective schedule)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -130,7 +140,8 @@ def main() -> None:
         cfg = reduced(cfg)
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     train(cfg, shape, steps_total=args.steps, ckpt_dir=args.ckpt,
-          schedule=args.schedule, plan_cache=args.plan_cache)
+          schedule=args.schedule, plan_cache=args.plan_cache,
+          executor=args.executor)
 
 
 if __name__ == "__main__":

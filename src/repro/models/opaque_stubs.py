@@ -1,0 +1,46 @@
+"""Deterministic, shape-correct stand-ins for opaque kinds that have no
+production engine implementation (MoE dispatch/combine, recurrent scans).
+
+Shared by the executor-equivalence tests and ``benchmarks/bench_spmd.py``:
+those suites pin that two execution paths realize the *same dataflow*, not
+the fused ops' numerics (which live with the real model stack in
+``tests/test_models_smoke.py``).  One definition, so the test suite and the
+benchmark cannot silently validate different semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity_of(g) -> int:
+    """Expert capacity of the graph's MoE dispatch node (0 if none)."""
+    disp = [n for n in g.nodes if n.op == "moe_dispatch"]
+    return disp[0].shape[1] if disp else 0
+
+
+def make_stub_opaques(capacity: int = 0) -> dict[str, Callable]:
+    """{opaque kind: deterministic stand-in} for one graph (``capacity``
+    from ``capacity_of``).  Register via ``engine.register_opaque`` or
+    ``monkeypatch.setitem(engine.OPAQUE_FNS, ...)``."""
+
+    def cumnorm(h):
+        h = jnp.asarray(h)
+        t = jnp.arange(1, h.shape[1] + 1, dtype=h.dtype)[None, :, None]
+        return jnp.cumsum(h, axis=1) / t
+
+    def dispatch(x, route):
+        w = jax.nn.softmax(jnp.asarray(route), axis=-1)        # (b, s, e)
+        pooled = jnp.einsum("bsa,bse->ea", jnp.asarray(x), w)  # (e, a)
+        e = route.shape[-1]
+        return jnp.broadcast_to(pooled[:, None, :],
+                                (e, capacity, x.shape[-1])) / capacity
+
+    def combine(y, route):
+        w = jax.nn.softmax(jnp.asarray(route), axis=-1)
+        return jnp.einsum("eca,bse->bsa", jnp.asarray(y), w) / y.shape[1]
+
+    return {"ssm_scan": cumnorm, "mlstm_scan": cumnorm, "slstm_scan": cumnorm,
+            "moe_dispatch": dispatch, "moe_combine": combine}

@@ -1,0 +1,66 @@
+"""GRAD_MAPS completeness: every registered elementwise map op must be
+differentiable through ``grad_graph``, and its graph-gradient must match
+``jax.grad`` of the dense evaluation (the neg/add_const KeyError
+regression — map ops the engine could run but nobody could train through).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.autodiff import GRAD_MAPS, grad_graph
+from repro.core.einsum import EinGraph
+
+RNG = np.random.default_rng(7)
+
+#: params each op needs at build time (defaults exercised otherwise)
+_PARAMS = {"scale": {"c": 1.7}, "add_const": {"c": 0.3},
+           "rsqrt_eps": {"eps": 1e-3}}
+
+#: ops needing a positive-domain input
+_POSITIVE = {"rsqrt_eps"}
+
+
+@pytest.mark.parametrize("op", sorted(GRAD_MAPS))
+def test_every_grad_maps_op_matches_jax_grad(op):
+    params = _PARAMS.get(op, {})
+    g = EinGraph(f"grad_{op}")
+    x = g.input("x", "i j", (4, 6))
+    m = g.map(op, x, **params)
+    loss = g.einsum("i j ->", m, combine="id", agg="sum")
+    gg, grads, seed = grad_graph(g, loss, [x])
+
+    X = (RNG.normal(size=(4, 6)) + 0.2).astype(np.float32)
+    if op in _POSITIVE:
+        X = np.abs(X) + 0.5
+    vals = engine.run(gg, {x: X, seed: np.ones(())})
+
+    def f(v):
+        return jnp.sum(engine.MAP_FNS[op](v, **params))
+
+    want = jax.grad(f)(jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(vals[grads[x]]), np.asarray(want),
+                               rtol=1e-4, atol=1e-5,
+                               err_msg=f"grad mismatch for map op {op!r}")
+
+
+def test_grad_maps_covers_all_elementwise_map_fns():
+    """Every *forward* elementwise map op the engine registers must carry a
+    GRAD_MAPS entry (derivative-only helpers and the non-elementwise
+    softmax are exempt)."""
+    derivative_helpers = set(GRAD_MAPS.values()) - set(GRAD_MAPS)
+    exempt = derivative_helpers | {"softmax_last"}
+    missing = [op for op in engine.MAP_FNS
+               if op not in GRAD_MAPS and op not in exempt]
+    assert not missing, f"map ops without gradients: {missing}"
+
+
+def test_softmax_last_still_raises():
+    """Non-diagonal Jacobian: must refuse, not silently mis-differentiate."""
+    g = EinGraph()
+    x = g.input("x", "i j", (4, 6))
+    m = g.map("softmax_last", x)
+    loss = g.einsum("i j ->", m, combine="id", agg="sum")
+    with pytest.raises(NotImplementedError):
+        grad_graph(g, loss, [x])

@@ -11,7 +11,6 @@ numerics (those live in tests/test_models_smoke.py against the real model
 stack).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -26,35 +25,17 @@ FAMILIES = ["llama-7b", "mixtral-8x7b", "xlstm-125m", "hymba-1.5b"]
 GRID = [(1, 8), (2, 16)]  # (batch, seq)
 
 
-@pytest.fixture(autouse=True)
+@pytest.fixture()
 def _stub_opaques(monkeypatch):
-    """Deterministic stand-ins for opaque kinds the engine has no production
-    implementation for (registered only for this module's tests)."""
+    """graph -> registers the shared deterministic opaque stand-ins
+    (repro.models.opaque_stubs) for the test's lifetime."""
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
 
-    def cumnorm(h):
-        h = jnp.asarray(h)
-        t = jnp.arange(1, h.shape[1] + 1, dtype=h.dtype)[None, :, None]
-        return jnp.cumsum(h, axis=1) / t
+    def apply(g):
+        for kind, fn in make_stub_opaques(capacity_of(g)).items():
+            monkeypatch.setitem(engine.OPAQUE_FNS, kind, fn)
 
-    def dispatch(x, route):
-        w = jax.nn.softmax(jnp.asarray(route), axis=-1)        # (b, s, e)
-        pooled = jnp.einsum("bsa,bse->ea", jnp.asarray(x), w)  # (e, a)
-        e = route.shape[-1]
-        cap = _CAP[0]
-        return jnp.broadcast_to(pooled[:, None, :],
-                                (e, cap, x.shape[-1])) / cap
-
-    def combine(y, route):
-        w = jax.nn.softmax(jnp.asarray(route), axis=-1)
-        return jnp.einsum("eca,bse->bsa", jnp.asarray(y), w) / y.shape[1]
-
-    for kind in ("ssm_scan", "mlstm_scan", "slstm_scan"):
-        monkeypatch.setitem(engine.OPAQUE_FNS, kind, cumnorm)
-    monkeypatch.setitem(engine.OPAQUE_FNS, "moe_dispatch", dispatch)
-    monkeypatch.setitem(engine.OPAQUE_FNS, "moe_combine", combine)
-
-
-_CAP = [0]  # expert capacity of the graph under test (set per case)
+    return apply
 
 
 def _feeds_for(g, cfg):
@@ -72,14 +53,13 @@ def _feeds_for(g, cfg):
 
 @pytest.mark.parametrize("arch", FAMILIES)
 @pytest.mark.parametrize("bs", GRID, ids=lambda t: f"b{t[0]}s{t[1]}")
-def test_old_and_new_paths_bit_identical(arch, bs):
+def test_old_and_new_paths_bit_identical(arch, bs, _stub_opaques):
     cfg = reduced(get_config(arch))
     shape = ShapeConfig("eq", "prefill", bs[1], bs[0])
 
     # -- old surface: imperative graph + positional runner -------------------
     g = build_graph(cfg, shape)
-    disp = [n for n in g.nodes if n.op == "moe_dispatch"]
-    _CAP[0] = disp[0].shape[1] if disp else 0
+    _stub_opaques(g)
     feeds = _feeds_for(g, cfg)
     in_order = [g.nodes[i].name for i in g.input_ids()]
     old_fn = jax.jit(engine.make_runner(g))

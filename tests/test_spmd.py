@@ -1,0 +1,452 @@
+"""Explicit-collective shard_map executor (core/spmd.py).
+
+Three layers of coverage:
+
+1. **Schedule unit tests** — ``build_schedule``/``plan_repart`` are pure
+   functions of (graph, plan, mesh shape), so collective-kind assertions
+   (all_to_all detection, ppermute swaps, psum_scatter fusion, and the
+   "an unsharded plan emits zero collectives" invariant) run on any host,
+   no devices needed.
+
+2. **Execution equivalence** — shard_map vs the GSPMD engine vs the dense
+   oracle vs the TRA reference runtime on small graphs, randomized property
+   graphs, and the model-zoo eingraphs, on whatever host mesh exists.  The
+   multi-device CI job re-runs this file under
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so every
+   collective path is exercised on real device groups each PR.
+
+3. **Cost accounting** — traced wire floats stay within the §7 ``plan_cost``
+   upper bound (the property ``bench_spmd.py`` reports for the model zoo).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import engine, spmd
+from repro.core.decomp import Plan, eindecomp, plan_cost
+from repro.core.einsum import EinGraph, eval_graph_dense
+from repro.core.tra import execute_graph_tra
+from repro.launch.mesh import make_host_mesh
+from repro.models.eingraphs import program_for
+
+RNG = np.random.default_rng(0)
+N_DEV = len(jax.devices())
+
+
+def _feeds(g, scale=0.1):
+    out = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            out[n.nid] = RNG.integers(0, max(n.shape[-1], 2),
+                                      size=n.shape).astype(np.int32)
+        else:
+            out[n.nid] = (RNG.normal(size=n.shape) * scale).astype(np.float32)
+    return out
+
+
+def _mlp_graph():
+    g = EinGraph("mlp")
+    x = g.input("x", "b a", (8, 16))
+    w1 = g.input("w1", "a f", (16, 32))
+    w2 = g.input("w2", "f c", (32, 8))
+    h = g.einsum("b a, a f -> b f", x, w1)
+    h = g.map("relu", h)
+    y = g.einsum("b f, f c -> b c", h, w2)
+    return g, y
+
+
+# ---------------------------------------------------------------------------
+# 1. schedule unit tests (device-free)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_repart_all_to_all():
+    steps = spmd.plan_repart((("model",), ()), ((), ("model",)))
+    assert steps == [("all_to_all", "model", 0, 1)]
+
+
+def test_plan_repart_gather_then_slice():
+    # model must leave dim 0 *and* data must arrive there: no pure move
+    steps = spmd.plan_repart((("model",), ("data",)), (("data",), ()))
+    kinds = [s[0] for s in steps]
+    assert "all_gather" in kinds and "slice" in kinds
+
+
+def test_plan_repart_ppermute_swap():
+    steps = spmd.plan_repart((("data",), ()), (("model",), ()))
+    assert steps == [("ppermute", "data", "model", 0)]
+
+
+def test_plan_repart_ppermute_size_mismatch_falls_back():
+    steps = spmd._plan_repart_sized((("data",), ()), (("model",), ()),
+                                    {"data": 2, "model": 4})
+    assert [s[0] for s in steps] == ["all_gather", "slice"]
+
+
+def test_plan_repart_nested_axes_roundtrip():
+    src = (("data", "model"), ())
+    dst = (("data",), ("model",))
+    steps = spmd.plan_repart(src, dst)
+    # minor axis moves off dim 0 onto dim 1: a single all_to_all
+    assert steps == [("all_to_all", "model", 0, 1)]
+    # and the reverse direction comes home too
+    back = spmd.plan_repart(dst, src)
+    assert back == [("all_to_all", "model", 1, 0)]
+
+
+def test_plan_repart_identity_is_empty():
+    assert spmd.plan_repart((("data",), ()), (("data",), ())) == []
+
+
+def test_unsharded_plan_emits_zero_collectives():
+    """The all-``None`` plan — no label mapped to a >1 mesh axis — must
+    lower to a schedule with no collectives at all."""
+    g, y = _mlp_graph()
+    plan = eindecomp(g, 1, mesh_axes={"data": 1, "model": 1})
+    sched = spmd.build_schedule(g, plan, {"data": 1, "model": 1}, [y])
+    assert len(sched.trace) == 0, sched.trace.summary()
+    # empty axes_by_node entirely (plan missing axes) behaves the same
+    bare = Plan(p=1, mode="mesh")
+    bare.d_by_node = {n.nid: {l: 1 for l in n.labels} for n in g.nodes}
+    sched2 = spmd.build_schedule(g, bare, {"data": 1, "model": 1}, [y])
+    assert len(sched2.trace) == 0
+
+
+def test_schedule_contraction_emits_psum():
+    g, y = _mlp_graph()
+    plan = eindecomp(g, 8, mesh_axes={"data": 2, "model": 4})
+    sched = spmd.build_schedule(g, plan, {"data": 2, "model": 4}, [y])
+    counts = sched.trace.counts
+    assert counts.get("psum", 0) + counts.get("psum_scatter", 0) >= 1
+    assert sched.trace.total_bytes > 0
+
+
+def test_schedule_psum_scatter_fusion():
+    """When every consumer wants the contracted mesh axis on the same output
+    dim, the aggregation fuses to one reduce-scatter."""
+    g = EinGraph()
+    a = g.input("a", "b f", (8, 16))
+    w = g.input("w", "f c", (16, 8))
+    z = g.einsum("b f, f c -> b c", a, w)
+    out = g.einsum("b c -> b c", z, combine="id", agg="")
+    plan = Plan(p=4, mode="mesh")
+    plan.d_by_node = {0: {"b": 1, "f": 4}, 1: {"f": 4, "c": 1},
+                      2: {"b": 1, "f": 4, "c": 4}, 3: {"b": 1, "c": 4}}
+    plan.axes_by_node = {0: {"f": ("model",)}, 1: {"f": ("model",)},
+                         2: {"f": ("model",)}, 3: {"c": ("model",)}}
+    sched = spmd.build_schedule(g, plan, {"model": 4}, [out])
+    kinds = sched.trace.counts
+    assert kinds == {"psum_scatter": 1}, kinds
+    # the scattered layout rides to the consumer: no extra repartition
+    assert sched.layouts[2] == ((), ("model",))
+
+
+def test_schedule_opaque_gathers_then_reslices():
+    g = EinGraph()
+    t = g.input("table", "v a", (16, 8))
+    i = g.input("ids", "b", (4,), dtype=np.int32)
+    o = g.opaque("gather_rows", [t, i], "b a", (4, 8),
+                 in_labels=[("v", "a"), ("b",)], shardable={"b", "a"})
+    plan = Plan(p=4, mode="mesh")
+    plan.d_by_node = {0: {"v": 1, "a": 4}, 1: {"b": 1}, 2: {"b": 1, "a": 4}}
+    plan.axes_by_node = {0: {"a": ("model",)}, 1: {}, 2: {"a": ("model",)}}
+    sched = spmd.build_schedule(g, plan, {"model": 4}, [o])
+    assert sched.trace.counts == {"all_gather": 1}
+    # output re-sliced to the plan layout, locally (free)
+    assert sched.layouts[2] == ((), ("model",))
+
+
+def test_trace_summary_and_aggregates():
+    g, y = _mlp_graph()
+    plan = eindecomp(g, 8, mesh_axes={"data": 2, "model": 4})
+    sched = spmd.build_schedule(g, plan, {"data": 2, "model": 4}, [y])
+    tr = sched.trace
+    assert sum(tr.counts.values()) == len(tr)
+    assert sum(tr.bytes_by_kind.values()) == tr.total_bytes
+    assert "collectives" in tr.summary()
+
+
+def test_traced_wire_elems_within_plan_cost_bound():
+    """Ring-priced traced movement must not exceed the §7 p2p upper bound
+    the DP optimized (the bench_spmd acceptance property)."""
+    g, y = _mlp_graph()
+    for axes in ({"data": 2, "model": 4}, {"data": 4, "model": 2},
+                 {"data": 8, "model": 1}):
+        plan = eindecomp(g, 8, mesh_axes=axes)
+        sched = spmd.build_schedule(g, plan, axes, [y])
+        predicted = plan_cost(g, plan)
+        assert sched.trace.total_elems <= predicted, (
+            axes, sched.trace.total_elems, predicted)
+
+
+# ---------------------------------------------------------------------------
+# 2. execution equivalence
+# ---------------------------------------------------------------------------
+
+
+def _compare_executors(g, out_ids, plan, mesh, feeds, *, atol=1e-5):
+    """shard_map vs GSPMD vs dense oracle on one planned graph."""
+    in_ids = g.input_ids()
+    args = [feeds[i] for i in in_ids]
+    tr = spmd.CollectiveTrace()
+    f_spmd = jax.jit(engine.make_runner(
+        g, out_ids, plan=plan, mesh=mesh, executor="shard_map",
+        collective_trace=tr))
+    f_gspmd = jax.jit(engine.make_runner(g, out_ids, plan=plan, mesh=mesh))
+    outs_s = f_spmd(*args)
+    outs_g = f_gspmd(*args)
+    if len(out_ids) == 1:
+        outs_s, outs_g = (outs_s,), (outs_g,)
+    dense = eval_graph_dense(g, feeds)
+    for o, vs, vg in zip(out_ids, outs_s, outs_g):
+        np.testing.assert_allclose(np.asarray(vs), np.asarray(vg),
+                                   rtol=1e-5, atol=atol,
+                                   err_msg=f"shard_map vs gspmd at node {o}")
+        np.testing.assert_allclose(np.asarray(vs), dense[o],
+                                   rtol=1e-4, atol=atol,
+                                   err_msg=f"shard_map vs dense at node {o}")
+    return tr
+
+
+def test_mlp_equivalence_all_executors():
+    g, y = _mlp_graph()
+    mesh = make_host_mesh((2, 4))
+    axes = engine.mesh_axes_dict(mesh)
+    plan = eindecomp(g, math.prod(axes.values()), mesh_axes=axes)
+    tr = _compare_executors(g, [y], plan, mesh, _feeds(g))
+    if N_DEV >= 8:
+        assert len(tr) > 0  # a sharded contraction must move something
+
+
+def test_softmax_attention_style_graph_equivalence():
+    """Non-contraction combine/agg forms (max-agg, expsub, div) through the
+    executor — the paper's §3 softmax composite."""
+    g = EinGraph("softmax")
+    x = g.input("X", "i j", (8, 16))
+    c = g.einsum("i j -> i", x, combine="id", agg="max")
+    e = g.einsum("i j, i -> i j", x, c, combine="expsub", agg="")
+    s = g.einsum("i j -> i", e, combine="id", agg="sum")
+    y = g.einsum("i j, i -> i j", e, s, combine="div", agg="")
+    mesh = make_host_mesh((2, 4))
+    axes = engine.mesh_axes_dict(mesh)
+    plan = eindecomp(g, math.prod(axes.values()), mesh_axes=axes)
+    feeds = _feeds(g, scale=1.0)
+    _compare_executors(g, [y], plan, mesh, feeds)
+    # cross-check against jax softmax
+    f = jax.jit(engine.make_runner(g, [y], plan=plan, mesh=mesh,
+                                   executor="shard_map"))
+    np.testing.assert_allclose(
+        np.asarray(f(feeds[0])), jax.nn.softmax(feeds[0], axis=-1),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_grad_program_equivalence():
+    """The backward EinGraph (broadcast_to opaques, accum adds) runs through
+    the explicit-collective executor and matches jax.grad."""
+    from repro import frontend as ein
+
+    x = ein.tensor("x", "b a", (8, 16))
+    w = ein.tensor("w", "a f", (16, 32))
+    y = ein.einsum("b a, a f -> b f", x, w).map("relu")
+    loss = ein.einsum("b f ->", y, combine="id", agg="sum")
+    prog = ein.Program({"loss": loss}).grad("w")
+    mesh = make_host_mesh((2, 4))
+    run = prog.compile(mesh=mesh, executor="shard_map")
+    X = (RNG.normal(size=(8, 16))).astype(np.float32)
+    W = (RNG.normal(size=(16, 32)) * 0.1).astype(np.float32)
+    got = run({"x": X, "w": W})["grad_w"]
+
+    def ref(w):
+        return jnp.sum(jnp.maximum(X @ w, 0))
+
+    want = jax.grad(ref)(W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="ppermute swap needs a 2x2 mesh")
+def test_ppermute_swap_executes_correctly():
+    """Equal-size axis swap runs the real lax.ppermute (the (2,4) meshes
+    elsewhere always demote it to gather+slice) — pins the linearized
+    (ax_old, ax_new) perm construction at runtime."""
+    g = EinGraph()
+    x = g.input("x", "b f", (8, 16))
+    h = g.einsum("b f -> b f", x, combine="id", agg="")
+    y = g.einsum("b f -> b f", h, combine="id", agg="")
+    plan = Plan(p=4, mode="mesh")
+    plan.d_by_node = {0: {"b": 2}, 1: {"b": 2}, 2: {"b": 2}}
+    plan.axes_by_node = {0: {"b": ("data",)}, 1: {"b": ("data",)},
+                         2: {"b": ("model",)}}
+    mesh = make_host_mesh((2, 2))
+    tr = spmd.CollectiveTrace()
+    fn = jax.jit(engine.make_runner(g, [y], plan=plan, mesh=mesh,
+                                    executor="shard_map",
+                                    collective_trace=tr))
+    X = RNG.normal(size=(8, 16)).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(fn(X)), X)
+    assert tr.counts == {"ppermute": 1}, tr.counts
+
+
+def test_tra_oracle_agreement():
+    """shard_map and the literal §4.3 TRA reference runtime execute the same
+    plan to the same result."""
+    g, y = _mlp_graph()
+    mesh = make_host_mesh((2, 4))
+    axes = engine.mesh_axes_dict(mesh)
+    plan = eindecomp(g, math.prod(axes.values()), mesh_axes=axes)
+    feeds = _feeds(g)
+    f = jax.jit(engine.make_runner(g, [y], plan=plan, mesh=mesh,
+                                   executor="shard_map"))
+    got = np.asarray(f(*[feeds[i] for i in g.input_ids()]))
+    vals, _ = execute_graph_tra(g, plan.d_by_node, feeds)
+    np.testing.assert_allclose(got, vals[y].to_dense(), rtol=1e-4, atol=1e-5)
+
+
+def _random_graph(rng):
+    """A random 3–6 node EinGraph over a small label pool (bounds all 8 so
+    every pow2/mesh partitioning divides)."""
+    pool = ["i", "j", "k", "l"]
+    g = EinGraph("prop")
+    n_in = int(rng.integers(2, 4))
+    nodes = []
+    for t in range(n_in):
+        nl = int(rng.integers(1, 4))
+        labels = list(rng.choice(pool, size=nl, replace=False))
+        nodes.append(g.input(f"in{t}", labels, [8] * nl))
+    for _ in range(int(rng.integers(1, 4))):
+        a = int(rng.choice(nodes))
+        b = int(rng.choice(nodes))
+        la, lb = g.nodes[a].labels, g.nodes[b].labels
+        union = list(dict.fromkeys(la + lb))
+        keep = [l for l in union if rng.random() < 0.6] or [union[0]]
+        expr = f"{' '.join(la)}, {' '.join(lb)} -> {' '.join(keep)}"
+        try:
+            nodes.append(g.einsum(expr, a, b))
+        except ValueError:
+            continue
+        if rng.random() < 0.3:
+            nodes.append(g.map("relu", nodes[-1]))
+    return g
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_randomized_property_graphs(seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng)
+    outs = g.outputs()
+    mesh = make_host_mesh((2, 4))
+    axes = engine.mesh_axes_dict(mesh)
+    plan = eindecomp(g, math.prod(axes.values()), mesh_axes=axes)
+    _compare_executors(g, outs, plan, mesh, _feeds(g))
+
+
+# ---------------------------------------------------------------------------
+# model zoo: shard_map vs GSPMD vs dense on every migrated family
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def _stub_opaques(monkeypatch):
+    """graph -> registers the shared deterministic opaque stand-ins
+    (repro.models.opaque_stubs) for the test's lifetime."""
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    def apply(g):
+        for kind, fn in make_stub_opaques(capacity_of(g)).items():
+            monkeypatch.setitem(engine.OPAQUE_FNS, kind, fn)
+
+    return apply
+
+
+@pytest.mark.parametrize("arch", ["llama-7b", "mixtral-8x7b", "xlstm-125m",
+                                  "hymba-1.5b"])
+def test_model_zoo_shard_map_matches_gspmd(_stub_opaques, arch):
+    cfg = reduced(get_config(arch))
+    shape = ShapeConfig("eq", "prefill", 8, 2)
+    prog = program_for(cfg, shape)
+    g = prog.graph
+    _stub_opaques(g)
+    mesh = make_host_mesh((2, 4))
+    feeds = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            feeds[n.name] = RNG.integers(0, cfg.vocab,
+                                         size=n.shape).astype(np.int32)
+        else:
+            feeds[n.name] = (RNG.normal(size=n.shape) * 0.05).astype(
+                np.float32)
+    out_g = prog.compile(mesh=mesh)(feeds)["logits"]
+    run_s = prog.compile(mesh=mesh, executor="shard_map")
+    out_s = run_s(feeds)["logits"]
+    assert run_s.collectives is not None
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_g),
+                               rtol=2e-4, atol=2e-4)
+    if N_DEV >= 8:
+        # a real mesh must shard *something* in these cells
+        assert run_s.plan.axes_by_node
+
+
+# ---------------------------------------------------------------------------
+# 3. wiring / validation
+# ---------------------------------------------------------------------------
+
+
+def test_make_runner_shard_map_self_plans_from_bare_mesh():
+    """A bare mesh self-plans under shard_map (the executor cannot run
+    unplanned, unlike gspmd which would just drop the constraints)."""
+    g, y = _mlp_graph()
+    mesh = make_host_mesh((2, 4))
+    fn = jax.jit(engine.make_runner(g, [y], mesh=mesh, executor="shard_map"))
+    feeds = _feeds(g)
+    got = np.asarray(fn(*[feeds[i] for i in g.input_ids()]))
+    np.testing.assert_allclose(got, eval_graph_dense(g, feeds)[y],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_make_runner_rejects_bad_executor():
+    g, y = _mlp_graph()
+    with pytest.raises(ValueError, match="unknown executor"):
+        engine.make_runner(g, [y], executor="mpi")
+
+
+def test_make_runner_shard_map_requires_mesh_mode_plan():
+    g, y = _mlp_graph()
+    mesh = make_host_mesh((1, 1))
+    with pytest.raises(ValueError, match="shard_map"):
+        engine.make_runner(g, [y], executor="shard_map")  # no mesh/plan
+    plan = eindecomp(g, 4)  # pow2 mode: no axes
+    with pytest.raises(ValueError, match="mesh-mode"):
+        engine.make_runner(g, [y], plan=plan, mesh=mesh,
+                           executor="shard_map")
+
+
+def test_collective_trace_requires_shard_map():
+    g, y = _mlp_graph()
+    with pytest.raises(ValueError, match="collective_trace"):
+        engine.make_runner(g, [y], collective_trace=spmd.CollectiveTrace())
+
+
+def test_program_compile_shard_map_requires_mesh():
+    from repro import frontend as ein
+
+    x = ein.tensor("x", "a", (8,))
+    with pytest.raises(ValueError, match="mesh"):
+        ein.Program({"y": x.map("relu")}).compile(
+            mesh_axes={"data": 2}, executor="shard_map")
+
+
+def test_program_compile_rejects_unknown_executor():
+    from repro import frontend as ein
+
+    x = ein.tensor("x", "a", (8,))
+    with pytest.raises(ValueError, match="unknown executor"):
+        ein.Program({"y": x.map("relu")}).compile(p=2, executor="nope")
