@@ -1,0 +1,21 @@
+"""Shared writer for the cross-PR perf-trajectory artifacts.
+
+Every benchmark that tracks numbers across PRs emits the same schema — a
+flat list of ``{name, metric, value, unit}`` rows — to ``BENCH_<bench>.json``
+at the repo root, which CI uploads as an artifact.  One writer, so the
+artifacts cannot drift apart.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(rows: list[dict], path: Path) -> None:
+    """Write ``{name, metric, value, unit}`` rows (pre-built by the bench)."""
+    for r in rows:
+        assert set(r) == {"name", "metric", "value", "unit"}, r
+    path.write_text(json.dumps(rows, indent=1))
+    print(f"wrote {path} ({len(rows)} rows)", flush=True)

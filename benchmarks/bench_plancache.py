@@ -17,13 +17,16 @@ Run:
   PYTHONPATH=src python benchmarks/bench_plancache.py --smoke    # CI subset
 
 Rows are printed as ``PLANROW <graph> cold_ms warm_ms speedup`` so CI logs
-diff cleanly across commits.
+diff cleanly across commits, and the run writes ``BENCH_plancache.json``
+(``{name, metric, value, unit}`` rows) at the repo root so planner latency
+is tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import math
 import time
+from pathlib import Path
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.core import canon
@@ -32,6 +35,7 @@ from repro.core.plancache import PlanCache
 from repro.models.eingraphs import build_graph
 
 SMOKE_ARCHS = ["llama-7b", "mixtral-8x7b", "xlstm-125m"]
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _time(fn, reps: int = 1) -> tuple[float, object]:
@@ -75,11 +79,29 @@ def bench_graph(name: str, g, mesh_axes: dict[str, int]) -> dict:
             "speedup": t_cold / max(t_warm, 1e-9)}
 
 
+def _bench_rows(rows: list[dict]) -> list[dict]:
+    """{name, metric, value, unit} rows — the cross-PR perf trajectory."""
+    out = []
+    for r in rows:
+        out += [
+            {"name": f"plancache/{r['name']}/cold", "metric": "wall_clock",
+             "value": round(r["cold_ms"], 3), "unit": "ms"},
+            {"name": f"plancache/{r['name']}/warm", "metric": "wall_clock",
+             "value": round(r["warm_ms"], 4), "unit": "ms"},
+            {"name": f"plancache/{r['name']}/speedup", "metric": "ratio",
+             "value": round(r["speedup"], 1), "unit": "x"},
+        ]
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI subset: 3 archs on a 4x4 mesh")
     ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    ap.add_argument("--bench-out",
+                    default=str(REPO_ROOT / "BENCH_plancache.json"),
+                    help="perf-trajectory JSON (default: repo root)")
     args = ap.parse_args()
 
     archs = SMOKE_ARCHS if args.smoke else ["llama-7b"] + list(ARCH_IDS)
@@ -102,6 +124,10 @@ def main() -> None:
 
     if not rows:
         raise SystemExit(f"no arch supports shape {args.shape!r}")
+    if args.bench_out:
+        from _bench_io import write_bench_json
+
+        write_bench_json(_bench_rows(rows), Path(args.bench_out))
     llama = next((r for r in rows if r["name"] == "llama-7b"), None)
     if llama is not None:
         assert llama["speedup"] >= 10, (

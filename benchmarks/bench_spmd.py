@@ -8,16 +8,30 @@ For every model-zoo family (plus a plain MLP):
      the shard_map executor's static collective schedule will actually move
      (ring-priced).  The plan cost is an upper bound — ``traced <=
      predicted`` is the property that makes the DP's prices trustworthy
-     (Deinsum's argument: emit the schedule you costed);
+     (Deinsum's argument: emit the schedule you costed).  With ``--check``
+     the bound is additionally asserted **per ring/a2a-ruled opaque node**
+     against ``decomp.opaque_node_bound`` — i.e. ring attention and a2a
+     expert parallelism never fall back to gathering full K/V or token
+     buffers;
   3. time both executors end-to-end (jit warm, best of N).
 
-Rows print as ``SPMDROW <arch> ...`` so CI logs diff commit over commit.
+Rows print as ``SPMDROW <arch> ...`` so CI logs diff commit over commit,
+and the run writes ``BENCH_spmd.json`` (``{name, metric, value, unit}``
+rows) at the repo root so perf is tracked across PRs.
+
+``--emit-costs out.json`` additionally micro-benchmarks each collective
+kind on the live mesh and writes measured ns-per-element constants —
+``core.cost.CostModel.with_measured(out.json)`` then prices the DP with
+observed numbers instead of the ring formulas.
 
 Usage:
   PYTHONPATH=src python benchmarks/bench_spmd.py [--check] [--reps 5]
+      [--emit-costs out.json] [--bench-out BENCH_spmd.json]
 """
 import argparse
+import json
 import time
+from pathlib import Path
 
 from repro.launch.hostdev import force_host_devices
 
@@ -30,11 +44,12 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
 from repro.core import engine
-from repro.core.decomp import plan_cost
+from repro.core.decomp import opaque_node_bound, plan_cost
 from repro.launch.mesh import make_host_mesh
 from repro.models.eingraphs import program_for
 
 FAMILIES = ["llama-7b", "mixtral-8x7b", "xlstm-125m", "hymba-1.5b"]
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _feeds(g, vocab, rng):
@@ -90,6 +105,18 @@ def bench_cell(arch: str, reps: int, check: bool) -> dict:
     max_diff = float(np.abs(np.asarray(outs_g["logits"])
                             - np.asarray(outs_s["logits"])).max())
 
+    # per-node accounting for the ruled opaques (ring / a2a)
+    opaques = []
+    for n in g.nodes:
+        if n.kind != "opaque":
+            continue
+        rule = traced.rule_by_node.get(n.nid, "?")
+        opaques.append({
+            "nid": n.nid, "name": n.name, "rule": rule,
+            "traced_elems": traced.elems_by_node.get(n.nid, 0),
+            "bound_elems": opaque_node_bound(g, run_s.plan, n.nid),
+        })
+
     row = {
         "arch": arch,
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
@@ -97,6 +124,8 @@ def bench_cell(arch: str, reps: int, check: bool) -> dict:
         "traced_elems": traced.total_elems,
         "traced_bytes": traced.total_bytes,
         "collectives": dict(traced.counts),
+        "by_rule": traced.by_rule(),
+        "opaques": opaques,
         "t_gspmd_ms": t_g * 1e3,
         "t_shard_map_ms": t_s * 1e3,
         "max_abs_diff": max_diff,
@@ -111,12 +140,102 @@ def bench_cell(arch: str, reps: int, check: bool) -> dict:
     for kind, cnt in sorted(traced.counts.items()):
         print(f"        {kind:14s} x{cnt:<3d} "
               f"{traced.bytes_by_kind[kind]:,} B", flush=True)
+    for o in opaques:
+        ok = "OK" if o["traced_elems"] <= o["bound_elems"] else "OVER"
+        print(f"        opaque {o['name']:12s} rule={o['rule']:9s} "
+              f"traced={o['traced_elems']:>10,} "
+              f"bound={o['bound_elems']:>10,} {ok}", flush=True)
     if check:
         assert row["within_bound"], (
             f"{arch}: traced {traced.total_elems:,} elems exceed the §7 "
             f"plan_cost bound {predicted:,}")
         assert max_diff < 2e-3, f"{arch}: executors diverge ({max_diff})"
+        for o in opaques:
+            if o["rule"] in ("ring", "a2a"):
+                assert o["traced_elems"] <= o["bound_elems"], (
+                    f"{arch}/{o['name']}: {o['rule']} rule moved "
+                    f"{o['traced_elems']:,} elems, over its "
+                    f"_opaque_comm_cost bound {o['bound_elems']:,} — the "
+                    "realized schedule diverged from the priced one")
     return row
+
+
+# ---------------------------------------------------------------------------
+# collective-kind calibration (--emit-costs): measured ns per wire element
+# ---------------------------------------------------------------------------
+
+
+def calibrate_kinds(mesh, n_loc: int = 1 << 15, reps: int = 20) -> dict:
+    """Time one collective of each kind on the live mesh and convert to
+    ns-per-(ring-priced)-wire-element — the constants
+    ``CostModel.with_measured`` scales the DP's collective prices with."""
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.spmd import _shard_map
+
+    axes = tuple(mesh.axis_names)
+    n_dev = int(mesh.devices.size)
+    x = np.ones((n_dev * n_loc,), np.float32)
+
+    def run(body):
+        fn = jax.jit(_shard_map(body, mesh, (P(axes),), P(axes)))
+        out = fn(x)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    k = n_dev
+    bodies = {
+        "all_gather": (lambda b: lax.all_gather(b, axes, axis=0,
+                                                tiled=True)[:n_loc],
+                       n_dev * (k - 1) * n_loc),
+        "all_to_all": (lambda b: lax.all_to_all(
+            b.reshape(k, n_loc // k), axes, split_axis=0, concat_axis=0,
+            tiled=True).reshape(n_loc), n_dev * (k - 1) * n_loc // k),
+        "ppermute": (lambda b: lax.ppermute(
+            b, axes, [(i, (i + 1) % k) for i in range(k)]), n_dev * n_loc),
+        "psum": (lambda b: lax.psum(b, axes),
+                 n_dev * 2 * (k - 1) * n_loc // k),
+        "psum_scatter": (lambda b: lax.psum_scatter(
+            b, axes, scatter_dimension=0, tiled=True),
+            n_dev * (k - 1) * n_loc),
+    }
+    kinds = {}
+    for kind, (body, wire) in bodies.items():
+        t = run(body)
+        kinds[kind] = {"wall_s": t, "wire_elems": wire,
+                       "ns_per_elem": t * 1e9 / max(wire, 1)}
+        print(f"CALROW  {kind:14s} {t * 1e3:8.3f} ms  "
+              f"{kinds[kind]['ns_per_elem']:8.3f} ns/elem", flush=True)
+    return kinds
+
+
+def _bench_rows(rows: list[dict]) -> list[dict]:
+    """{name, metric, value, unit} rows — the cross-PR perf trajectory."""
+    out = []
+    for r in rows:
+        a = r["arch"]
+        out += [
+            {"name": f"spmd/{a}/shard_map", "metric": "wall_clock",
+             "value": round(r["t_shard_map_ms"], 3), "unit": "ms"},
+            {"name": f"spmd/{a}/gspmd", "metric": "wall_clock",
+             "value": round(r["t_gspmd_ms"], 3), "unit": "ms"},
+            {"name": f"spmd/{a}/traced", "metric": "wire_elems",
+             "value": r["traced_elems"], "unit": "elems"},
+            {"name": f"spmd/{a}/predicted", "metric": "wire_elems",
+             "value": r["predicted_elems"], "unit": "elems"},
+        ]
+        for o in r["opaques"]:
+            if o["rule"] in ("ring", "a2a"):
+                out.append({"name": f"spmd/{a}/opaque/{o['name']}",
+                            "metric": "wire_elems",
+                            "value": o["traced_elems"], "unit": "elems"})
+    return out
 
 
 def main() -> None:
@@ -124,7 +243,14 @@ def main() -> None:
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--arch", default=None, help="one family (default: all)")
     ap.add_argument("--check", action="store_true",
-                    help="assert traced <= predicted and output agreement")
+                    help="assert traced <= predicted (whole-program and "
+                    "per ring/a2a opaque node) and output agreement")
+    ap.add_argument("--emit-costs", default=None, metavar="OUT.JSON",
+                    help="micro-benchmark each collective kind and write "
+                    "measured ns/elem constants for "
+                    "CostModel.with_measured")
+    ap.add_argument("--bench-out", default=str(REPO_ROOT / "BENCH_spmd.json"),
+                    help="perf-trajectory JSON (default: repo root)")
     args = ap.parse_args()
 
     print(f"devices: {len(jax.devices())}")
@@ -132,6 +258,20 @@ def main() -> None:
     rows = [bench_cell(a, args.reps, args.check) for a in fams]
     ok = sum(r["within_bound"] for r in rows)
     print(f"\n{ok}/{len(rows)} cells within the plan-cost transfer bound")
+    if args.bench_out:
+        from _bench_io import write_bench_json
+
+        write_bench_json(_bench_rows(rows), Path(args.bench_out))
+    if args.emit_costs:
+        kinds = calibrate_kinds(make_host_mesh((2, 4)))
+        payload = {"kinds": kinds,
+                   "mesh": [int(s) for s in make_host_mesh((2, 4))
+                            .devices.shape],
+                   "rows": [{k: r[k] for k in
+                             ("arch", "traced_elems", "traced_bytes",
+                              "t_shard_map_ms")} for r in rows]}
+        Path(args.emit_costs).write_text(json.dumps(payload, indent=1))
+        print(f"wrote {args.emit_costs}", flush=True)
 
 
 if __name__ == "__main__":

@@ -137,25 +137,33 @@ def node_cost(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
 # ---------------------------------------------------------------------------
 
 
-def cost_repart_collective(
+def repart_collective_terms(
     d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
-) -> int:
+) -> dict[str, int]:
+    """Collective repartition price decomposed by collective kind, so a
+    calibrated ``CostModel`` can weight each kind by its measured constant."""
     d_from = tuple(int(x) for x in d_from)
     d_to = tuple(int(x) for x in d_to)
+    terms = {"all_gather": 0, "all_to_all": 0}
     if d_from == d_to:
-        return 0
+        return terms
     n = _prod(bound)
-    cost = 0
     for df, dt in zip(d_from, d_to):
         if df == dt:
             continue
         if df > dt:
             k = df // max(dt, 1)
-            cost += (k - 1) * n // max(k, 1)      # all-gather along this dim
+            terms["all_gather"] += (k - 1) * n // max(k, 1)
         else:
             k = dt // max(df, 1)
-            cost += n // max(k, 1)                # scatter / all-to-all
-    return cost
+            terms["all_to_all"] += n // max(k, 1)  # scatter / all-to-all
+    return terms
+
+
+def cost_repart_collective(
+    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
+) -> int:
+    return sum(repart_collective_terms(d_from, d_to, bound).values())
 
 
 def cost_agg_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
@@ -202,3 +210,71 @@ def node_cost_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int
     partitioning look free; regression-pinned in tests/test_cost.py.)"""
     return (cost_join_collective(spec, d, bounds)
             + cost_agg_collective(spec, d, bounds))
+
+
+# ---------------------------------------------------------------------------
+# CostModel: the pricing strategy the §8 DP runs with.
+# ---------------------------------------------------------------------------
+
+
+class CostModel:
+    """Paper (§7 p2p upper bound) vs collective (torus ring) pricing —
+    DESIGN.md §2 second adaptation.  The DP is identical; only the repart
+    and aggregation prices change.
+
+    In collective mode an optional ``coeffs`` map scales each collective
+    kind's ring-formula price by a measured constant (relative to
+    all-gather), so the DP prices with *observed* interconnect behavior
+    instead of the analytic formulas.  Build one from a
+    ``bench_spmd.py --emit-costs`` dump via ``CostModel.with_measured``.
+    """
+
+    def __init__(self, mode: str = "paper",
+                 coeffs: dict[str, float] | None = None):
+        assert mode in ("paper", "collective")
+        self.mode = mode
+        self.coeffs = dict(coeffs) if coeffs else None
+
+    def repart(self, d_from, d_to, bound):
+        if self.mode == "collective":
+            if self.coeffs:
+                terms = repart_collective_terms(d_from, d_to, bound)
+                return int(sum(v * self.coeffs.get(k, 1.0)
+                               for k, v in terms.items()))
+            return cost_repart_collective(d_from, d_to, bound)
+        return cost_repart(d_from, d_to, bound)
+
+    def node(self, spec, d, bounds):
+        if self.mode == "collective":
+            if self.coeffs:
+                join = cost_join_collective(spec, d, bounds)
+                agg = cost_agg_collective(spec, d, bounds)
+                return int(join * self.coeffs.get("all_gather", 1.0)
+                           + agg * self.coeffs.get("psum_scatter", 1.0))
+            return node_cost_collective(spec, d, bounds)
+        return node_cost(spec, d, bounds)
+
+    @classmethod
+    def with_measured(cls, source) -> "CostModel":
+        """Collective-mode model calibrated from measured constants.
+
+        ``source`` is a path to (or dict of) the JSON that
+        ``benchmarks/bench_spmd.py --emit-costs out.json`` writes:
+        ``{"kinds": {kind: {"ns_per_elem": float, ...}, ...}, ...}``.
+        Each kind's price is scaled by its measured ns-per-element relative
+        to all-gather's (the reference collective); kinds the measurement
+        missed keep coefficient 1.0.
+        """
+        import json
+        from pathlib import Path
+
+        obj = source if isinstance(source, dict) else json.loads(
+            Path(source).read_text())
+        kinds = obj.get("kinds", obj)
+        ns = {k: float(v["ns_per_elem"]) for k, v in kinds.items()
+              if isinstance(v, dict) and v.get("ns_per_elem")}
+        if not ns:
+            return cls("collective")
+        base = ns.get("all_gather") or (sum(ns.values()) / len(ns))
+        return cls("collective",
+                   coeffs={k: v / base for k, v in ns.items()})

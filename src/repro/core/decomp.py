@@ -26,9 +26,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
-from repro.core import cost as _cost
-from repro.core.cost import (cost_repart, cost_repart_collective,
-                             node_cost, node_cost_collective)
+# CostModel lives in core/cost.py (where the calibration hook is); it is
+# re-exported here because the planner surface historically owned it.
+from repro.core.cost import CostModel, cost_repart, node_cost  # noqa: F401
 from repro.core.einsum import EinGraph, EinSpec, Node
 from repro.core.tra import ld_concat, project
 
@@ -51,26 +51,6 @@ def _pow2_splits(total_log2: int, n_buckets: int):
 def count_partitionings(n_log2p: int, n_labels: int) -> int:
     """(N + D - 1)! / (N! (D-1)!) — §8.1."""
     return math.comb(n_log2p + n_labels - 1, n_labels - 1)
-
-
-class CostModel:
-    """Paper (§7 p2p upper bound) vs collective (torus ring) pricing —
-    DESIGN.md §2 second adaptation.  The DP is identical; only the repart
-    and aggregation prices change."""
-
-    def __init__(self, mode: str = "paper"):
-        assert mode in ("paper", "collective")
-        self.mode = mode
-
-    def repart(self, d_from, d_to, bound):
-        if self.mode == "collective":
-            return cost_repart_collective(d_from, d_to, bound)
-        return cost_repart(d_from, d_to, bound)
-
-    def node(self, spec, d, bounds):
-        if self.mode == "collective":
-            return node_cost_collective(spec, d, bounds)
-        return node_cost(spec, d, bounds)
 
 
 def node_label_universe(node: Node) -> tuple[str, ...]:
@@ -336,7 +316,23 @@ def eindecomp(
     plan is inserted before returning.  The per-path DP is additionally
     memoized on canonical path signatures (plancache.path_memo_key), so
     isomorphic layers inside one graph plan once.
+
+    ``cost_mode`` may also be a ``CostModel`` instance (e.g.
+    ``CostModel.with_measured(...)``) — its calibration coefficients then
+    enter the cache key, so calibrated and formula-priced plans never
+    collide.
     """
+    # plan-time validation: every opaque comm declaration must resolve to a
+    # registered shard rule, so the executor can realize what the DP priced
+    from repro.core import opaque_rules
+
+    opaque_rules.validate_graph(g)
+    if isinstance(cost_mode, CostModel):
+        cm = cost_mode
+        cost_mode = cm.mode if not cm.coeffs else (
+            f"{cm.mode}|{sorted(cm.coeffs.items())}")
+    else:
+        cm = CostModel(cost_mode)
     cache_kw = dict(mesh_axes=mesh_axes, cost_mode=cost_mode,
                     offpath_repart=offpath_repart, algo="eindecomp")
     if cache is not None:
@@ -346,7 +342,6 @@ def eindecomp(
         from repro.core import plancache as _pc
 
     mode = "mesh" if mesh_axes is not None else "pow2"
-    cm = CostModel(cost_mode)
     plan = Plan(p=p, mode=mode)
     labeled: set[int] = set()
 
@@ -387,6 +382,9 @@ def eindecomp_tree(
     Used by the tests to validate the linearized version against optimal.
     ``cache`` behaves as in ``eindecomp`` (keyed separately: the tree DP's
     reported cost is the exact DP objective, not ``plan_cost``)."""
+    from repro.core import opaque_rules
+
+    opaque_rules.validate_graph(g)
     cache_kw = dict(mesh_axes=mesh_axes, algo="tree")
     if cache is not None:
         hit = cache.lookup(g, p, **cache_kw)
@@ -470,7 +468,7 @@ def _optimize_path(
             if n.kind == "einsum":
                 own = cm.node(n.spec, d, bounds)
             else:
-                own = _opaque_comm_cost(g, n, d, bounds)
+                own = _opaque_comm_cost(g, n, d, bounds, p)
             total = float(own)
             feasible = True
             in_label_sets = (n.spec.in_labels if n.kind == "einsum" else
@@ -642,15 +640,34 @@ def _in_labels_of(m: Node):
 
 
 def _opaque_comm_cost(g: EinGraph, n: Node, d: dict[str, int],
-                      bounds: dict[str, int]) -> int:
+                      bounds: dict[str, int], p: int | None = None) -> int:
     """Internal communication of fused opaque ops (beyond-paper: the paper
     has no opaque nodes).  Declared via node.params["comm"] =
-    [{"kind": "ring"|"a2a", "label": l, "input": i}, ...]:
+    [{"kind": "ring"|"a2a", "label": l, "input": i, "rule": name?}, ...]
+    where ``input`` is an input index, or ``-1`` for the node's own output
+    (the moved buffer of a combine-style op is its token-sided result, not
+    its expert-sided input):
 
-      ring — partitioning `l` r ways makes input i circulate a ring:
-             (r-1) * numel(i) total floats (ring/flash sequence parallelism).
-      a2a  — partitioning `l` r ways makes input i cross an all-to-all:
-             (r-1)/r * numel(i) floats (MoE dispatch/combine).
+      ring — partitioning `l` r ways makes the referenced tensor circulate
+             a ring: (r-1) * numel total floats (each device passes its
+             1/r block r-1 hops — ring/flash sequence parallelism).
+      a2a  — partitioning `l` r ways makes the referenced tensor cross an
+             all-to-all: (r-1) * numel * (p/r) floats.  A *static-shape*
+             all-to-all must size every (sender, receiver) lane for the
+             worst case (one destination may claim a sender's whole block),
+             so the per-group price equals the ring's, and when only r of
+             the p processors shard `l` the remaining p/r groups carry the
+             (replicated) buffer redundantly — the executor's shard rules
+             (core/opaque_rules.py) emit exactly this schedule, which is
+             what keeps traced-within-priced honest.  (The ragged
+             (r-1)/r * numel ideal would under-price every realizable
+             static schedule by p×.)  Without ``p`` the single-group price
+             is used.
+
+    The optional ``rule`` names the ``core.opaque_rules`` shard rule that
+    *realizes* this schedule in the shard_map executor (defaulting to the
+    kind's namesake), so pricing and lowering resolve the same schedule;
+    ``eindecomp`` validates the resolution at plan time.
     """
     comm = n.params.get("comm")
     if not comm:
@@ -660,14 +677,13 @@ def _opaque_comm_cost(g: EinGraph, n: Node, d: dict[str, int],
         r = int(d.get(c["label"], 1))
         if r <= 1:
             continue
-        in_ls = n.in_labels[c["input"]]
+        idx = c["input"]
+        ls = n.labels if idx == -1 else n.in_labels[idx]
         numel = 1
-        for l in in_ls:
+        for l in ls:
             numel *= bounds[l]
-        if c["kind"] == "ring":
-            total += (r - 1) * numel
-        else:
-            total += (r - 1) * numel // r
+        dup = max((p or r) // r, 1) if c["kind"] == "a2a" else 1
+        total += (r - 1) * numel * dup
     return total
 
 
@@ -739,7 +755,7 @@ def plan_cost(g: EinGraph, plan: Plan) -> int:
             total += node_cost(n.spec, d, node_bounds(g, n.nid))
         if n.kind == "opaque":
             total += _opaque_comm_cost(g, n, plan.d_by_node.get(n.nid, {}),
-                                       node_bounds(g, n.nid))
+                                       node_bounds(g, n.nid), plan.p)
         if n.kind in ("einsum", "opaque"):
             in_sets = _in_labels_of(n)
             d = plan.d_by_node[n.nid]
@@ -751,4 +767,26 @@ def plan_cost(g: EinGraph, plan: Plan) -> int:
                 da = tuple(da_map.get(l, 1) for l in na.labels)
                 target = tuple(d.get(l, 1) for l in ls)
                 total += cost_repart(da, target, na.shape)
+    return total
+
+
+def opaque_node_bound(g: EinGraph, plan: Plan, nid: int) -> int:
+    """What ``plan_cost`` attributes to one opaque node: the declared
+    internal movement (``_opaque_comm_cost``) plus the priced repartitions
+    of its input edges.  A shard rule that realizes the declared schedule
+    keeps the node's traced wire elems within this bound — the per-node
+    property ``bench_spmd.py --check`` asserts for ring/a2a-ruled nodes
+    (the replicated fallback is ~p× over it on sharded inputs)."""
+    n = g.nodes[nid]
+    assert n.kind == "opaque", (nid, n.kind)
+    d = plan.d_by_node.get(nid, {})
+    total = _opaque_comm_cost(g, n, d, node_bounds(g, nid), plan.p)
+    for ls, a in zip(_in_labels_of(n), n.inputs):
+        na = g.nodes[a]
+        if na.kind == "input":
+            continue  # pre-placed (§8.2)
+        da_map = plan.d_by_node.get(a, {})
+        da = tuple(da_map.get(l, 1) for l in na.labels)
+        target = tuple(d.get(l, 1) for l in ls)
+        total += cost_repart(da, target, na.shape)
     return total

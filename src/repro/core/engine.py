@@ -222,7 +222,10 @@ def run(
 #:   gspmd     — per-node ``with_sharding_constraint`` hints; XLA's
 #:               partitioner chooses the realized collective schedule.
 #:   shard_map — core/spmd.py: the plan's TRA dataflow emitted literally as
-#:               named collectives inside one ``jax.shard_map``.
+#:               named collectives inside one ``jax.shard_map``; opaque
+#:               nodes dispatch per-shard through the shard-rule registry
+#:               (core/opaque_rules.py: ring attention, a2a expert
+#:               parallelism, replicate fallback).
 EXECUTORS = ("gspmd", "shard_map")
 
 
@@ -243,7 +246,9 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
     a bare ``mesh`` therefore self-plans under shard_map, where the gspmd
     executor would run unconstrained).
     ``collective_trace`` (a ``core.spmd.CollectiveTrace``) receives the
-    static collective schedule of the shard_map executor at build time.
+    static collective schedule of the shard_map executor at build time —
+    including the per-node / per-shard-rule attribution (``rule_by_node``,
+    ``by_rule``) of the opaque ring/a2a programs.
 
     If no ``plan`` is given but planning inputs are (``p``, ``mesh_axes``,
     or a ``mesh`` together with a ``cache``), the runner plans the graph

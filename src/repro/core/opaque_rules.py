@@ -1,0 +1,532 @@
+"""Shard rules for opaque nodes: per-device programs for fused ops.
+
+The shard_map executor (core/spmd.py) lowers einsum nodes through the §4.3
+join→agg→repartition rewrite, but opaque nodes (flash attention, MoE
+dispatch/combine, recurrent scans) are black boxes to that machinery.  The
+cost DP already *prices* their internal movement through the ``comm``
+declarations on the node (``{"kind": "ring"|"a2a", "label": ..., "input":
+..., "rule": ...}``, see ``core/decomp._opaque_comm_cost``); this module is
+the executor-side counterpart: an ``OpaqueShardRule`` turns (node, plan
+assignment, mesh sizes) into the per-device program — requested input
+layouts, internal collective events for the trace, and a ``run`` closure
+emitting local kernel calls + explicit collectives inside the shard_map
+body.
+
+Built-in rules (the registry; ``register_rule`` admits new ones):
+
+  ``ring``      — sequence-parallel flash attention: q stays sharded on its
+                  sequence axis, K/V circulate around the ring via
+                  ``lax.ppermute`` with the online-softmax ``(m, l, acc)``
+                  state carried across ring steps
+                  (``kernels.ops.flash_attention_step``); causal /
+                  sliding-window masks stay correct under rotation because
+                  every step masks against the block's *absolute* kv offset.
+  ``a2a``       — expert-parallel MoE dispatch/combine: tokens stay sharded
+                  on the sequence axis, expert assignment is agreed globally
+                  via a (tiny) all-gather of per-expert counts, and token
+                  payloads cross a real ``lax.all_to_all`` to/from the
+                  expert-sharded buffers — never a full token-buffer gather.
+  ``replicate`` — the fallback: gather inputs, run the fused op densely on
+                  every device, re-slice the output to the plan layout
+                  (free local slices).  Used for every opaque op without a
+                  ``comm``-declared rule (recurrent scans, embedding
+                  gathers) and whenever a rule's structural preconditions
+                  fail (it returns ``None`` from ``lower``).
+
+A rule resolves from the node's ``comm`` declaration: each entry may name
+its ``rule`` explicitly; entries without one derive it from ``kind``
+(``ring``→ring, ``a2a``→a2a).  ``validate_graph`` runs at plan time
+(``eindecomp``) so a plan can never price a schedule the executor cannot
+resolve.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol, Sequence, runtime_checkable
+
+from repro.core import spmd as _spmd
+from repro.core.einsum import EinGraph, Node
+
+#: step tuple shape shared with core/spmd.py (("slice", ax, dim), ...)
+Layout = _spmd.Layout
+
+_KIND_TO_RULE = {"ring": "ring", "a2a": "a2a"}
+
+
+# ---------------------------------------------------------------------------
+# Protocol + lowering result
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RuleLowering:
+    """What a rule contributes to the static schedule for one opaque node.
+
+    ``arg_layouts`` are the layouts the executor must repartition each input
+    into before calling ``run``; ``out_layout`` is the layout of the value
+    *after* ``post_steps`` (which the generic step machinery executes);
+    ``events`` are the rule's internal collectives, pre-priced as
+    ``(kind, axes, elems, nbytes)`` so the CollectiveTrace sees ring
+    ppermute steps and a2a bytes without tracing; ``run(args)`` executes the
+    node's local program inside the shard_map body.
+    """
+
+    arg_layouts: list[Layout]
+    out_layout: Layout
+    run: Callable[[Sequence[Any]], Any]
+    post_steps: list[tuple] = field(default_factory=list)
+    events: list[tuple[str, tuple[str, ...], int, int]] = field(
+        default_factory=list)
+
+
+@runtime_checkable
+class OpaqueShardRule(Protocol):
+    """Given a node, its plan assignment and the mesh, emit the per-device
+    program.  ``lower`` returns ``None`` when the rule's structural
+    preconditions do not hold — the executor then falls back to
+    ``replicate`` (always correct, at worst pricier)."""
+
+    name: str
+
+    def lower(self, g: EinGraph, node: Node,
+              ax_n: dict[str, tuple[str, ...]],
+              sizes: dict[str, int]) -> RuleLowering | None: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry + resolution
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, OpaqueShardRule] = {}
+
+
+def register_rule(rule: OpaqueShardRule) -> None:
+    RULES[rule.name] = rule
+
+
+def get_rule(name: str) -> OpaqueShardRule:
+    return RULES[name]
+
+
+def resolve_rule_name(node: Node) -> str:
+    """Rule name declared by the node's ``comm`` entries (explicit ``rule``
+    key, else derived from ``kind``); ``replicate`` when undeclared."""
+    comm = node.params.get("comm") or []
+    names = set()
+    for entry in comm:
+        name = entry.get("rule") or _KIND_TO_RULE.get(entry.get("kind"))
+        if name is not None:
+            names.add(name)
+    if not names:
+        return "replicate"
+    if len(names) > 1:
+        raise ValueError(
+            f"node {node.name!r}: comm entries declare conflicting shard "
+            f"rules {sorted(names)} — one rule lowers the whole node")
+    return names.pop()
+
+
+def validate_graph(g: EinGraph) -> None:
+    """Plan-time validation: every opaque node's comm declaration must
+    resolve to a registered rule with known kinds, so the DP never prices a
+    schedule the executor cannot lower."""
+    for n in g.nodes:
+        if n.kind != "opaque":
+            continue
+        for entry in (n.params.get("comm") or []):
+            if entry.get("kind") not in _KIND_TO_RULE:
+                raise ValueError(
+                    f"node {n.name!r}: comm kind {entry.get('kind')!r} "
+                    f"unknown (expected one of {sorted(_KIND_TO_RULE)})")
+        name = resolve_rule_name(n)
+        if name not in RULES:
+            raise ValueError(
+                f"node {n.name!r}: comm declares shard rule {name!r}, but "
+                f"only {sorted(RULES)} are registered "
+                "(core.opaque_rules.register_rule)")
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _prod(xs) -> int:
+    return math.prod(int(x) for x in xs)
+
+
+# byte accounting must match the einsum path's exactly: share spmd's helper
+_itemsize = _spmd._itemsize
+
+
+def axis_linear_index(axes: Sequence[str], sizes: dict[str, int]):
+    """Device's linearized (row-major, major→minor) coordinate along
+    ``axes`` — a traced scalar; matches jax's tuple-axis collective order."""
+    from jax import lax
+
+    idx = 0
+    for ax in axes:
+        idx = idx * sizes[ax] + lax.axis_index(ax)
+    return idx
+
+
+def moe_route(route, capacity: int | None = None):
+    """Deterministic top-1 routing in sequence-major token order.
+
+    ``route (B, S, E)`` -> ``(expert (T,), pos (T,), gate (T,), cnt (E,))``
+    with ``T = S*B`` and token ``t = s*B + b``.  ``pos`` is the token's
+    global slot within its expert — the count of *earlier* (sequence-major)
+    tokens routed to the same expert — so capacity cutoffs (``pos >=
+    capacity`` drops the token) are identical between the dense stubs
+    (models/opaque_stubs.py) and the sharded a2a rule, whose per-device
+    counts only need a prefix over earlier sequence shards.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    route = jnp.asarray(route)
+    B, S, E = route.shape
+    r2 = jnp.swapaxes(route, 0, 1).reshape(S * B, E)
+    gates = jax.nn.softmax(r2, axis=-1)
+    expert = jnp.argmax(r2, axis=-1)
+    oneh = (expert[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oneh, 0) - oneh,
+                              expert[:, None], 1)[:, 0]
+    gate = jnp.take_along_axis(gates, expert[:, None], 1)[:, 0]
+    cnt = jnp.sum(oneh, axis=0)
+    return expert, pos, gate, cnt
+
+
+def _rank_by(dest, n: int):
+    """Rank of each token among the tokens sharing its destination (the
+    packing order both sides of an all_to_all agree on)."""
+    import jax.numpy as jnp
+
+    oneh = (dest[:, None] == jnp.arange(n)[None, :]).astype(jnp.int32)
+    return jnp.take_along_axis(jnp.cumsum(oneh, 0) - oneh,
+                               dest[:, None], 1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# replicate: the always-correct fallback (the pre-rule executor behavior)
+# ---------------------------------------------------------------------------
+
+
+class ReplicateRule:
+    """Gather every input to replicated, run the fused op densely on all
+    devices, re-slice the output to the plan layout (local, free)."""
+
+    name = "replicate"
+
+    def lower(self, g, node, ax_n, sizes):
+        arg_layouts = [tuple(() for _ in g.nodes[a].shape)
+                       for a in node.inputs]
+        out_layout = _spmd._plan_layout(node, ax_n, sizes)
+        post_steps = _spmd.plan_repart(tuple(() for _ in node.shape),
+                                       out_layout)
+
+        def run(args):
+            from repro.core import engine
+
+            return engine.OPAQUE_FNS[node.op](*args, **node.call_params)
+
+        return RuleLowering(arg_layouts=arg_layouts, out_layout=out_layout,
+                            run=run, post_steps=post_steps)
+
+
+# ---------------------------------------------------------------------------
+# ring: sequence-parallel flash attention
+# ---------------------------------------------------------------------------
+
+
+class RingAttentionRule:
+    """K/V circulate the ring; q stays put; (m, l, acc) carried across
+    steps.  Structural contract: 3 inputs labeled ``q (b, h, s, d)``,
+    ``k/v (b, k, ℓ, d)`` with ``ℓ`` the comm-declared ring label (``s``
+    shared with q in prefill, the cache-time label in decode).  The q-head
+    and kv-head dims are co-sharded on the union of their planned axes so
+    the local GQA group mapping equals the global one; the head_dim must be
+    unsharded.  When the ring label is unsharded the rule degenerates to a
+    fully local per-shard call — zero collectives, which is exactly what
+    the DP priced."""
+
+    name = "ring"
+
+    def lower(self, g, node, ax_n, sizes):
+        if node.op != "flash_attention" or len(node.inputs) != 3:
+            return None
+        if len(node.in_labels) != 3 or any(len(ls) != 4
+                                           for ls in node.in_labels):
+            return None
+        lq, lk, lv = node.in_labels
+        if lk != lv:
+            return None
+        ring_labels = {c["label"] for c in (node.params.get("comm") or [])
+                       if c.get("kind") == "ring"}
+        if len(ring_labels) != 1:
+            return None
+        ell = next(iter(ring_labels))
+        b_l, h_l, sq_l, d_l = lq
+        if lk[0] != b_l or lk[2] != ell or lk[3] != d_l:
+            return None
+        if tuple(node.labels) != (b_l, h_l, sq_l, d_l):
+            return None
+        k_l = lk[1]
+
+        def norm(label):
+            return _spmd._norm_axes(ax_n.get(label, ()), sizes)
+
+        ba, ha, ka, ra, da = norm(b_l), norm(h_l), norm(k_l), norm(ell), \
+            norm(d_l)
+        if da:
+            return None  # head_dim sharded: no local kernel call possible
+        if sq_l != ell and norm(sq_l):
+            return None  # decode: a sharded q-seq has no ring to ride
+        head_axes = ha + tuple(a for a in ka if a not in ha)
+
+        qn = g.nodes[node.inputs[0]]
+        kn = g.nodes[node.inputs[1]]
+        h_total, k_total = qn.shape[1], kn.shape[1]
+        ph = _prod(sizes[a] for a in head_axes)
+        r = _prod(sizes[a] for a in ra)
+        if (k_total == 0 or h_total % k_total or h_total % max(ph, 1)
+                or k_total % max(ph, 1)):
+            return None
+        if kn.shape[2] % max(r, 1) or (sq_l == ell and qn.shape[2] % max(r, 1)):
+            return None
+
+        q_ring = sq_l == ell
+        q_layout: Layout = (ba, head_axes, ra if q_ring else (), ())
+        kv_layout: Layout = (ba, head_axes, ra, ())
+        sizes = dict(sizes)
+        call = dict(node.call_params)
+
+        events: list[tuple] = []
+        if r > 1:
+            n_dev = _prod(sizes.values())
+            n_loc = _prod(_spmd.local_shape(kn.shape, kv_layout, sizes))
+            item = _itemsize(kn.dtype)
+            for _step in range(r - 1):
+                for _tensor in range(2):  # k and v each take the ring hop
+                    events.append(("ppermute", tuple(ra), n_dev * n_loc,
+                                   n_dev * n_loc * item))
+
+        def run(args):
+            import jax.numpy as jnp
+            from jax import lax
+
+            from repro.kernels import ops
+
+            q, k, v = (jnp.asarray(a) for a in args)
+            causal = call.get("causal", True)
+            window = call.get("window", 0)
+            scale = call.get("scale")
+            q0 = call.get("q_offset", 0)
+            if r <= 1:
+                return ops.flash_attention(q, k, v, causal=causal,
+                                           window=window, scale=scale,
+                                           q_offset=q0)
+            idx = axis_linear_index(ra, sizes)
+            sq_loc, sk_loc = q.shape[2], k.shape[2]
+            q_off = q0 + idx * sq_loc if q_ring else q0
+            perm = [(i, (i + 1) % r) for i in range(r)]
+            carry = None
+            for t in range(r):
+                j = (idx - t) % r  # kv block resident at ring step t
+                carry = ops.flash_attention_step(
+                    q, k, v, carry, causal=causal, window=window, scale=scale,
+                    q_offset=q_off, kv_offset=j * sk_loc)
+                if t < r - 1:
+                    k = lax.ppermute(k, tuple(ra), perm)
+                    v = lax.ppermute(v, tuple(ra), perm)
+            return ops.attention_finalize(carry, q.dtype)
+
+        return RuleLowering(arg_layouts=[q_layout, kv_layout, kv_layout],
+                            out_layout=q_layout, run=run, events=events)
+
+
+# ---------------------------------------------------------------------------
+# a2a: expert-parallel MoE dispatch / combine
+# ---------------------------------------------------------------------------
+
+
+class A2AMoERule:
+    """Tokens stay sequence-sharded; expert buffers stay expert-sharded;
+    the only bulk movement is a real all_to_all of token payloads (plus a
+    tiny all-gather of per-expert counts that fixes the global capacity
+    slots, and for combine an int32 slot-request all_to_all).  Matches the
+    deterministic top-1 routing of ``moe_route`` bit-for-bit with the dense
+    stubs.  Preconditions: the expert label carries the a2a mesh axes and
+    divides E; the sequence extent divides the shard count."""
+
+    name = "a2a"
+
+    def lower(self, g, node, ax_n, sizes):
+        if node.op == "moe_dispatch":
+            return self._lower_dispatch(g, node, ax_n, sizes)
+        if node.op == "moe_combine":
+            return self._lower_combine(g, node, ax_n, sizes)
+        return None
+
+    @staticmethod
+    def _norm(ax_n, sizes, label):
+        return _spmd._norm_axes(ax_n.get(label, ()), sizes)
+
+    def _lower_dispatch(self, g, node, ax_n, sizes):
+        # x (b, s, a), route (b, s, e) -> out (e, c, a)
+        if len(node.inputs) != 2 or len(node.in_labels) != 2:
+            return None
+        lx, lr = node.in_labels
+        if len(lx) != 3 or len(lr) != 3 or lx[:2] != lr[:2]:
+            return None
+        e_l, c_l, a_l = node.labels
+        if lr[2] != e_l or lx[2] != a_l:
+            return None
+        a2a_axes = self._norm(ax_n, sizes, e_l)
+        if self._norm(ax_n, sizes, a_l):
+            return None
+        r = _prod(sizes[a] for a in a2a_axes)
+        if r <= 1:
+            return None  # nothing crosses experts: dense replicate is priced
+        xn = g.nodes[node.inputs[0]]
+        batch, seq, d_model = xn.shape
+        n_exp, cap, _ = node.shape
+        if n_exp % r or seq % r:
+            return None
+        ca = self._norm(ax_n, sizes, c_l)
+        if any(a in a2a_axes for a in ca):
+            return None
+
+        sizes = dict(sizes)
+        t_loc = batch * (seq // r)
+        n_dev = _prod(sizes.values())
+        item = _itemsize(xn.dtype)
+        events = [
+            ("all_gather", tuple(a2a_axes), n_dev * (r - 1) * n_exp,
+             n_dev * (r - 1) * n_exp * 4),
+            ("all_to_all", tuple(a2a_axes), n_dev * (r - 1) * t_loc,
+             n_dev * (r - 1) * t_loc * 4),
+            ("all_to_all", tuple(a2a_axes), n_dev * (r - 1) * t_loc * d_model,
+             n_dev * (r - 1) * t_loc * d_model * item),
+        ]
+        post_steps = [("slice", ax, 1) for ax in ca]
+        out_layout: Layout = (tuple(a2a_axes), tuple(ca), ())
+        e_blk = n_exp // r
+
+        def run(args):
+            import jax.numpy as jnp
+            from jax import lax
+
+            x, route = (jnp.asarray(a) for a in args)
+            expert, pos_l, _gate, cnt = moe_route(route)
+            idx = axis_linear_index(a2a_axes, sizes)
+            allc = lax.all_gather(cnt, tuple(a2a_axes), axis=0,
+                                  tiled=False)                      # (r, E)
+            prefix = jnp.sum(
+                jnp.where(jnp.arange(r)[:, None] < idx, allc, 0), axis=0)
+            pos = pos_l + prefix[expert]
+            keep = pos < cap
+            dest = expert // e_blk
+            slot = jnp.where(keep, (expert % e_blk) * cap + pos,
+                             -1).astype(jnp.int32)
+            rank = _rank_by(dest, r)
+            xt = jnp.swapaxes(x, 0, 1).reshape(t_loc, x.shape[-1])
+            send_val = jnp.zeros((r, t_loc, x.shape[-1]),
+                                 x.dtype).at[dest, rank].set(xt)
+            send_slot = jnp.full((r, t_loc), -1,
+                                 jnp.int32).at[dest, rank].set(slot)
+            recv_val = lax.all_to_all(send_val, tuple(a2a_axes),
+                                      split_axis=0, concat_axis=0, tiled=True)
+            recv_slot = lax.all_to_all(send_slot, tuple(a2a_axes),
+                                       split_axis=0, concat_axis=0, tiled=True)
+            rs = recv_slot.reshape(-1)
+            rv = recv_val.reshape(-1, x.shape[-1])
+            valid = rs >= 0
+            sidx = jnp.where(valid, rs, 0)
+            out = jnp.zeros((e_blk * cap, x.shape[-1]), node.dtype)
+            out = out.at[sidx].add(rv * valid[:, None].astype(x.dtype))
+            return out.reshape(e_blk, cap, x.shape[-1])
+
+        return RuleLowering(
+            arg_layouts=[((), tuple(a2a_axes), ()), ((), tuple(a2a_axes), ())],
+            out_layout=out_layout, run=run, post_steps=post_steps,
+            events=events)
+
+    def _lower_combine(self, g, node, ax_n, sizes):
+        # y (e, c, a), route (b, s, e) -> out (b, s, a)
+        if len(node.inputs) != 2 or len(node.in_labels) != 2:
+            return None
+        ly, lr = node.in_labels
+        if len(ly) != 3 or len(lr) != 3:
+            return None
+        e_l, c_l, a_l = ly
+        b_l, s_l, a_out = node.labels
+        if lr[2] != e_l or lr[:2] != (b_l, s_l) or a_out != a_l:
+            return None
+        a2a_axes = self._norm(ax_n, sizes, e_l)
+        if self._norm(ax_n, sizes, a_l):
+            return None
+        r = _prod(sizes[a] for a in a2a_axes)
+        if r <= 1:
+            return None
+        yn = g.nodes[node.inputs[0]]
+        n_exp, cap, d_model = yn.shape
+        batch, seq, _ = node.shape
+        if n_exp % r or seq % r:
+            return None
+
+        sizes = dict(sizes)
+        t_loc = batch * (seq // r)
+        n_dev = _prod(sizes.values())
+        item = _itemsize(yn.dtype)
+        events = [
+            ("all_gather", tuple(a2a_axes), n_dev * (r - 1) * n_exp,
+             n_dev * (r - 1) * n_exp * 4),
+            ("all_to_all", tuple(a2a_axes), n_dev * (r - 1) * t_loc,
+             n_dev * (r - 1) * t_loc * 4),
+            ("all_to_all", tuple(a2a_axes), n_dev * (r - 1) * t_loc * d_model,
+             n_dev * (r - 1) * t_loc * d_model * item),
+        ]
+        e_blk = n_exp // r
+
+        def run(args):
+            import jax.numpy as jnp
+            from jax import lax
+
+            y, route = (jnp.asarray(a) for a in args)
+            expert, pos_l, gate, cnt = moe_route(route)
+            idx = axis_linear_index(a2a_axes, sizes)
+            allc = lax.all_gather(cnt, tuple(a2a_axes), axis=0, tiled=False)
+            prefix = jnp.sum(
+                jnp.where(jnp.arange(r)[:, None] < idx, allc, 0), axis=0)
+            pos = pos_l + prefix[expert]
+            keep = pos < cap
+            owner = expert // e_blk
+            slot = jnp.where(keep, (expert % e_blk) * cap + pos,
+                             -1).astype(jnp.int32)
+            rank = _rank_by(owner, r)
+            send_req = jnp.full((r, t_loc), -1,
+                                jnp.int32).at[owner, rank].set(slot)
+            recv_req = lax.all_to_all(send_req, tuple(a2a_axes),
+                                      split_axis=0, concat_axis=0, tiled=True)
+            validr = recv_req >= 0
+            rr = jnp.maximum(recv_req, 0)
+            vals = (y.reshape(e_blk * cap, d_model)[rr]
+                    * validr[..., None].astype(y.dtype))   # (r, t_loc, D)
+            back = lax.all_to_all(vals, tuple(a2a_axes),
+                                  split_axis=0, concat_axis=0, tiled=True)
+            tok = back[owner, rank]                        # (t_loc, D)
+            out = tok * (gate * keep).astype(y.dtype)[:, None]
+            s_loc = route.shape[1]
+            return out.reshape(s_loc, route.shape[0],
+                               d_model).swapaxes(0, 1).astype(node.dtype)
+
+        return RuleLowering(
+            arg_layouts=[(tuple(a2a_axes), (), ()), ((), tuple(a2a_axes), ())],
+            out_layout=((), tuple(a2a_axes), ()), run=run, events=events)
+
+
+register_rule(ReplicateRule())
+register_rule(RingAttentionRule())
+register_rule(A2AMoERule())

@@ -25,14 +25,17 @@ collective:
 Because the whole schedule is a pure function of (graph, plan, mesh shape),
 it is computed **before tracing**: ``build_schedule`` returns the per-node
 collective program plus a ``CollectiveTrace`` (count + wire bytes per
-collective kind) without touching a single array — the instrumentation the
-``bench_spmd`` benchmark compares against the §7 ``plan_cost`` prediction.
+collective kind, attributed per node and per shard rule) without touching a
+single array — the instrumentation the ``bench_spmd`` benchmark compares
+against the §7 ``plan_cost`` prediction.
 
-Opaque nodes (flash attention, MoE dispatch, recurrent scans) execute
-replicated in this executor: their inputs are gathered, the fused op runs
-densely on every device, and consumers re-slice locally.  Dispatching them
-per-shard (ring attention, a2a expert parallelism) is the documented
-follow-on (ROADMAP).
+Opaque nodes dispatch through the **shard-rule registry**
+(core/opaque_rules.py): a node's ``comm`` declaration resolves to a rule
+that emits its per-device program — ring attention circulates K/V via
+``ppermute`` with carried online-softmax state, MoE dispatch/combine cross
+a real ``all_to_all`` over the expert axis — and every opaque op without a
+declared rule (or whose rule's preconditions fail) falls back to the
+replicate-gather path: inputs gathered, dense compute, consumers re-slice.
 """
 from __future__ import annotations
 
@@ -49,8 +52,9 @@ from repro.core.einsum import EinGraph, EinSpec, Node
 Layout = tuple[tuple[str, ...], ...]
 
 #: collective kinds that move data over the wire (local slices are free).
+#: a grouped reduce-scatter records as kind "psum_scatter" (one event).
 WIRE_KINDS = ("all_gather", "all_to_all", "ppermute", "psum", "psum_scatter",
-              "pmax", "pmin", "gather_reduce")
+              "psum_scatter_grouped", "pmax", "pmin", "gather_reduce")
 
 
 # ---------------------------------------------------------------------------
@@ -67,6 +71,7 @@ class CollectiveEvent:
     nid: int                 # graph node the movement belongs to
     elems: int               # floats crossing the wire, summed over devices
     nbytes: int              # elems * itemsize
+    rule: str = ""           # shard rule that emitted it ("" = einsum path)
 
 
 class CollectiveTrace:
@@ -78,21 +83,31 @@ class CollectiveTrace:
     all-gather moves (k-1)·n_loc per device, all-reduce 2·(k-1)/k·n_loc,
     all-to-all (k-1)/k·n_loc, reduce-scatter (k-1)/k·n_loc, permute n_loc —
     matching launch/hlo_analysis.py's accounting of the GSPMD path.
+
+    Events carry their node and the shard rule that emitted them
+    (``rule_by_node`` records which rule lowered each opaque node), so the
+    ring/a2a traffic of an opaque hot spot is separable from the einsum
+    repartition flow: ``by_rule`` / ``bytes_by_node`` are what
+    ``bench_spmd --check`` asserts the per-node ``_opaque_comm_cost`` bound
+    against.
     """
 
     def __init__(self):
         self.events: list[CollectiveEvent] = []
+        self.rule_by_node: dict[int, str] = {}
 
     def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
-            nbytes: int) -> None:
+            nbytes: int, rule: str = "") -> None:
         self.events.append(CollectiveEvent(kind, tuple(axes), nid,
-                                           int(elems), int(nbytes)))
+                                           int(elems), int(nbytes), rule))
 
     def extend(self, other: "CollectiveTrace") -> None:
         self.events.extend(other.events)
+        self.rule_by_node.update(other.rule_by_node)
 
     def reset(self) -> None:
         self.events.clear()
+        self.rule_by_node.clear()
 
     @property
     def counts(self) -> dict[str, int]:
@@ -123,6 +138,34 @@ class CollectiveTrace:
     def total_bytes(self) -> int:
         return sum(e.nbytes for e in self.events)
 
+    @property
+    def elems_by_node(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for e in self.events:
+            out[e.nid] = out.get(e.nid, 0) + e.elems
+        return out
+
+    @property
+    def bytes_by_node(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for e in self.events:
+            out[e.nid] = out.get(e.nid, 0) + e.nbytes
+        return out
+
+    def by_rule(self) -> dict[str, dict[str, dict[str, int]]]:
+        """{rule: {kind: {"count": n, "elems": e, "bytes": b}}} — the
+        per-rule breakdown surfaced as
+        ``CompiledProgram.collectives_by_rule``.  Einsum-path events group
+        under ``""``."""
+        out: dict[str, dict[str, dict[str, int]]] = {}
+        for e in self.events:
+            slot = out.setdefault(e.rule, {}).setdefault(
+                e.kind, {"count": 0, "elems": 0, "bytes": 0})
+            slot["count"] += 1
+            slot["elems"] += e.elems
+            slot["bytes"] += e.nbytes
+        return out
+
     def __len__(self) -> int:
         return len(self.events)
 
@@ -135,6 +178,12 @@ class CollectiveTrace:
             lines.append(f"  {kind:14s} {cnt:4d}  {nb[kind]:,} B")
         lines.append(f"  {'total':14s} {len(self.events):4d}  "
                      f"{self.total_bytes:,} B")
+        for rule, kinds in sorted(self.by_rule().items()):
+            if not rule:
+                continue
+            tot = sum(s["bytes"] for s in kinds.values())
+            cnt = sum(s["count"] for s in kinds.values())
+            lines.append(f"  [{rule}]{'':9s} {cnt:4d}  {tot:,} B")
         return "\n".join(lines)
 
 
@@ -149,6 +198,11 @@ class CollectiveTrace:
 #   ("slice", ax, dim)                  shard a replicated dim (local, free)
 #   ("psum"|"pmax"|"pmin", axes)        cross-device reduction
 #   ("psum_scatter", ax, dim)           fused reduce + shard of dim
+#   ("psum_scatter_grouped", ((ax, dim), ...))
+#                                       one reduce-scatter over the combined
+#                                       axis group, scattering several dims
+#                                       at once (same wire bytes as the
+#                                       sequential per-axis form, one pass)
 #   ("gather_reduce", ax, reducer)      gather + local reduce (prod)
 
 
@@ -158,7 +212,12 @@ def plan_repart(src: Layout, dst: Layout) -> list[tuple]:
     Per-axis moves use ``all_to_all`` when the axis is minor-most on both
     sides, axis swaps on a single dimension use ``ppermute``, and the
     general fallback is gather-to-prefix + local re-slice — always correct,
-    never silently wrong, at worst pricier than optimal.
+    never silently wrong, at worst pricier than optimal.  Idle axes whose
+    target extends a dimension's already-correct prefix are sliced *early*
+    (free), both shrinking every later transfer and unlocking ``all_to_all``
+    moves whose destination prefix they complete — e.g. replicated →
+    ``(data, model)``-on-one-dim with ``model`` arriving from another dim is
+    slice(data) + all_to_all(model), not gather + slice + slice.
     """
     if len(src) != len(dst):
         raise ValueError(f"repartition rank mismatch: {src} vs {dst}")
@@ -172,11 +231,20 @@ def plan_repart(src: Layout, dst: Layout) -> list[tuple]:
                 return d
         return None
 
-    # 1. all_to_all: ax minor-most at its source dim, lands minor-most at its
-    #    destination dim whose prefix is already in place.
+    # 1. interleave (a) free slices of idle axes that extend a dim's correct
+    #    prefix with (b) all_to_all moves: ax minor-most at its source dim,
+    #    landing minor-most at a destination dim whose prefix is in place.
     changed = True
     while changed:
         changed = False
+        for d in range(len(cur)):
+            while (len(cur[d]) < len(want[d])
+                   and tuple(cur[d]) == want[d][:len(cur[d])]
+                   and dim_of(want[d][len(cur[d])], cur) is None):
+                ax = want[d][len(cur[d])]
+                steps.append(("slice", ax, d))
+                cur[d].append(ax)
+                changed = True
         for i, axes in enumerate(cur):
             if not axes:
                 continue
@@ -266,6 +334,9 @@ def _step_shape(shape: tuple[int, ...], step: tuple,
         s[step[2]] //= sizes[step[1]]
     elif kind == "psum_scatter":
         s[step[2]] //= sizes[step[1]]
+    elif kind == "psum_scatter_grouped":
+        for ax, d in step[1]:
+            s[d] //= sizes[ax]
     # ppermute / psum / pmax / pmin / gather_reduce keep the block shape
     return tuple(s)
 
@@ -290,6 +361,10 @@ def _wire_elems(step: tuple, shape: tuple[int, ...], sizes: dict[str, int],
     if kind == "psum_scatter":
         k = sizes[step[1]]
         return n_devices * (k - 1) * n_loc // k
+    if kind == "psum_scatter_grouped":
+        k = math.prod(sizes[ax] for ax, _ in step[1])
+        # identical to the sequential per-axis total: n·(k1k2-1)/(k1k2)
+        return n_devices * (k - 1) * n_loc // k
     if kind == "gather_reduce":
         k = sizes[step[1]]
         return n_devices * (k - 1) * n_loc
@@ -304,12 +379,16 @@ def _wire_elems(step: tuple, shape: tuple[int, ...], sizes: dict[str, int],
 @dataclass
 class NodeProgram:
     """Everything the body needs to execute one node: per-arg repartition
-    steps, the post-compute reduction/slice steps, and the output layout."""
+    steps, the post-compute reduction/slice steps, and the output layout.
+    Opaque nodes additionally carry the shard rule that lowered them and
+    its ``run`` closure (the per-device local program)."""
 
     nid: int
     arg_steps: list[list[tuple]] = field(default_factory=list)
     post_steps: list[tuple] = field(default_factory=list)
     layout: Layout = ()
+    rule: str = ""
+    run: Callable | None = None
 
 
 @dataclass
@@ -343,7 +422,8 @@ def _itemsize(dtype) -> int:
 
 def _record_steps(trace: CollectiveTrace, steps: list[tuple],
                   shape: tuple[int, ...], sizes: dict[str, int],
-                  n_devices: int, nid: int, itemsize: int) -> tuple[int, ...]:
+                  n_devices: int, nid: int, itemsize: int,
+                  rule: str = "") -> tuple[int, ...]:
     """Account every step in the trace; returns the final local shape."""
     for st in steps:
         kind = st[0]
@@ -352,10 +432,13 @@ def _record_steps(trace: CollectiveTrace, steps: list[tuple],
                 axes = tuple(st[1])
             elif kind == "ppermute":
                 axes = (st[1], st[2])
+            elif kind == "psum_scatter_grouped":
+                axes = tuple(ax for ax, _ in st[1])
             else:
                 axes = (st[1],)
             elems = _wire_elems(st, shape, sizes, n_devices)
-            trace.add(kind, axes, nid, elems, elems * itemsize)
+            rec = "psum_scatter" if kind == "psum_scatter_grouped" else kind
+            trace.add(rec, axes, nid, elems, elems * itemsize, rule)
         shape = _step_shape(shape, st, sizes)
     return shape
 
@@ -380,6 +463,111 @@ def _scatter_dim(g: EinGraph, plan, nid: int, ax: str,
     return dims.pop() if len(dims) == 1 else None
 
 
+def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
+                  trace: CollectiveTrace, n_dev: int, consumers,
+                  out_set) -> NodeProgram:
+    """join→agg lowering of one einsum node: per-arg repartitions to the
+    plan layout, then the aggregation collectives (psum / pmax / pmin /
+    gather-reduce), with sum-aggregations fused to reduce-scatters when the
+    consumers pin the scattered dim — one *grouped* reduce-scatter when
+    several contracted axes scatter to distinct output dims."""
+    nid = n.nid
+    spec = n.spec
+    prog = NodeProgram(nid=nid)
+    itemsize = _itemsize(n.dtype)
+    for ls, a in zip(spec.in_labels, n.inputs):
+        req = tuple(_norm_axes(ax_n.get(l, ()), sizes) for l in ls)
+        steps = _plan_repart_sized(layouts[a], req, sizes)
+        prog.arg_steps.append(steps)
+        src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+        got = _record_steps(trace, steps, src_shape, sizes, n_dev,
+                            nid, _itemsize(g.nodes[a].dtype))
+        want_shape = local_shape(g.nodes[a].shape, req, sizes)
+        assert got == want_shape, (nid, a, got, want_shape)
+
+    prog.layout = _plan_layout(n, ax_n, sizes)
+    agg_axes: list[str] = []
+    for l in spec.agg_labels:
+        agg_axes.extend(_norm_axes(ax_n.get(l, ()), sizes))
+    if agg_axes:
+        out_loc = list(local_shape(n.shape, prog.layout, sizes))
+        if spec.agg == "sum":
+            plain: list[str] = []
+            scatters: list[tuple[str, int]] = []
+            for ax in agg_axes:
+                d = _scatter_dim(g, plan, nid, ax, consumers,
+                                 out_set, sizes)
+                if (d is not None and not prog.layout[d]
+                        and d not in [sd for _, sd in scatters]):
+                    scatters.append((ax, d))
+                    lay = list(prog.layout)
+                    lay[d] = (ax,)
+                    prog.layout = tuple(lay)
+                else:
+                    plain.append(ax)
+            if len(scatters) == 1:
+                prog.post_steps.append(("psum_scatter",) + scatters[0])
+            elif scatters:
+                prog.post_steps.append(
+                    ("psum_scatter_grouped", tuple(scatters)))
+            if plain:
+                # reduce first, then scatter the fused axes
+                prog.post_steps.insert(0, ("psum", tuple(plain)))
+        elif spec.agg in ("max", "min"):
+            prog.post_steps.append(
+                ("pmax" if spec.agg == "max" else "pmin",
+                 tuple(agg_axes)))
+        else:  # prod: gather partial products, reduce locally
+            for ax in agg_axes:
+                prog.post_steps.append(("gather_reduce", ax, "prod"))
+        _record_steps(trace, prog.post_steps, tuple(out_loc), sizes,
+                      n_dev, nid, itemsize)
+    return prog
+
+
+def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
+                  trace: CollectiveTrace, n_dev: int) -> NodeProgram:
+    """Dispatch one opaque node through the shard-rule registry
+    (core/opaque_rules.py).  The resolved rule requests per-input layouts
+    (repartitioned by the generic machinery, so arbitrary producers are
+    handled), contributes its internal collective events to the trace
+    (ring ppermute hops, a2a token payloads), and supplies the ``run``
+    closure executed in the shard_map body.  Rules whose structural
+    preconditions fail fall back to the replicate-gather path."""
+    from repro.core import opaque_rules
+
+    nid = n.nid
+    prog = NodeProgram(nid=nid)
+    rule_name = opaque_rules.resolve_rule_name(n)
+    low = None
+    if rule_name != "replicate":
+        rule = opaque_rules.RULES.get(rule_name)
+        low = rule.lower(g, n, ax_n, sizes) if rule is not None else None
+    if low is None:
+        rule_name = "replicate"
+        low = opaque_rules.RULES["replicate"].lower(g, n, ax_n, sizes)
+    prog.rule = rule_name
+    prog.run = low.run
+    trace.rule_by_node[nid] = rule_name
+
+    for a, req in zip(n.inputs, low.arg_layouts):
+        steps = _plan_repart_sized(layouts[a], req, sizes)
+        prog.arg_steps.append(steps)
+        src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+        got = _record_steps(trace, steps, src_shape, sizes, n_dev, nid,
+                            _itemsize(g.nodes[a].dtype), rule_name)
+        want_shape = local_shape(g.nodes[a].shape, req, sizes)
+        assert got == want_shape, (nid, a, got, want_shape)
+    for kind, axes, elems, nbytes in low.events:
+        trace.add(kind, axes, nid, elems, nbytes, rule_name)
+    prog.post_steps = list(low.post_steps)
+    prog.layout = low.out_layout
+    # rule post steps are layout-conforming local slices (free, no wire
+    # events); any internal wire movement must be declared via low.events
+    assert all(st[0] == "slice" for st in prog.post_steps), prog.post_steps
+    return prog
+
+
 def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
                    out_ids: Sequence[int] | None = None) -> Schedule:
     """Lower (graph, plan, mesh shape) to the static collective schedule.
@@ -399,68 +587,19 @@ def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
     for nid in g.topo_order():
         n = g.nodes[nid]
         ax_n = plan.axes_by_node.get(nid, {}) if plan is not None else {}
-        prog = NodeProgram(nid=nid)
-        itemsize = _itemsize(n.dtype)
 
         if n.kind == "input":
+            prog = NodeProgram(nid=nid)
             prog.layout = _plan_layout(n, ax_n, sizes)
         elif n.kind == "map":
             # elementwise on the local block; layout rides through untouched
+            prog = NodeProgram(nid=nid)
             prog.layout = layouts[n.inputs[0]]
         elif n.kind == "einsum":
-            spec = n.spec
-            for ls, a in zip(spec.in_labels, n.inputs):
-                req = tuple(_norm_axes(ax_n.get(l, ()), sizes) for l in ls)
-                steps = _plan_repart_sized(layouts[a], req, sizes)
-                prog.arg_steps.append(steps)
-                src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
-                got = _record_steps(trace, steps, src_shape, sizes, n_dev,
-                                    nid, _itemsize(g.nodes[a].dtype))
-                want_shape = local_shape(g.nodes[a].shape, req, sizes)
-                assert got == want_shape, (nid, a, got, want_shape)
-
-            prog.layout = _plan_layout(n, ax_n, sizes)
-            agg_axes: list[str] = []
-            for l in spec.agg_labels:
-                agg_axes.extend(_norm_axes(ax_n.get(l, ()), sizes))
-            if agg_axes:
-                out_loc = list(local_shape(n.shape, prog.layout, sizes))
-                if spec.agg == "sum":
-                    plain: list[str] = []
-                    for ax in agg_axes:
-                        d = _scatter_dim(g, plan, nid, ax, consumers,
-                                         out_set, sizes)
-                        if d is not None and not prog.layout[d]:
-                            prog.post_steps.append(("psum_scatter", ax, d))
-                            lay = list(prog.layout)
-                            lay[d] = (ax,)
-                            prog.layout = tuple(lay)
-                        else:
-                            plain.append(ax)
-                    if plain:
-                        # reduce first, then scatter the fused axes
-                        prog.post_steps.insert(0, ("psum", tuple(plain)))
-                elif spec.agg in ("max", "min"):
-                    prog.post_steps.append(
-                        ("pmax" if spec.agg == "max" else "pmin",
-                         tuple(agg_axes)))
-                else:  # prod: gather partial products, reduce locally
-                    for ax in agg_axes:
-                        prog.post_steps.append(("gather_reduce", ax, "prod"))
-                _record_steps(trace, prog.post_steps, tuple(out_loc), sizes,
-                              n_dev, nid, itemsize)
-        else:  # opaque: gather to replicated, run dense, re-slice to plan
-            for a in n.inputs:
-                replicated = tuple(() for _ in g.nodes[a].shape)
-                steps = plan_repart(layouts[a], replicated)
-                prog.arg_steps.append(steps)
-                src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
-                _record_steps(trace, steps, src_shape, sizes, n_dev, nid,
-                              _itemsize(g.nodes[a].dtype))
-            prog.layout = _plan_layout(n, ax_n, sizes)
-            prog.post_steps = plan_repart(tuple(() for _ in n.shape),
-                                          prog.layout)
-            # post steps are pure slices (replicated -> sharded): free
+            prog = _lower_einsum(g, n, plan, ax_n, layouts, sizes, trace,
+                                 n_dev, consumers, out_set)
+        else:
+            prog = _lower_opaque(g, n, ax_n, layouts, sizes, trace, n_dev)
 
         layouts[nid] = prog.layout
         programs.append(prog)
@@ -559,6 +698,33 @@ def _run_steps(x, steps: list[tuple], sizes: dict[str, int]):
         elif kind == "psum_scatter":
             x = lax.psum_scatter(x, st[1], scatter_dimension=st[2],
                                  tiled=True)
+        elif kind == "psum_scatter_grouped":
+            # one reduce-scatter over the combined axis group, scattering
+            # several dims at once: split each target dim into (k_i, rest),
+            # bring the k_i factors to the front in axis order (matching the
+            # row-major device linearization of the axes tuple), flatten,
+            # scatter, and unflatten.
+            pairs = st[1]
+            ks = [sizes[ax] for ax, _ in pairs]
+            dims = [d for _, d in pairs]
+            new_shape: list[int] = []
+            split_pos: dict[int, int] = {}
+            for i, s in enumerate(x.shape):
+                if i in dims:
+                    k = ks[dims.index(i)]
+                    split_pos[i] = len(new_shape)
+                    new_shape += [k, s // k]
+                else:
+                    new_shape.append(s)
+            y = x.reshape(new_shape)
+            front = [split_pos[d] for d in dims]
+            rest = [i for i in range(len(new_shape)) if i not in front]
+            y = jnp.transpose(y, front + rest)
+            kk = math.prod(ks)
+            y = y.reshape((kk,) + y.shape[len(front):])
+            y = lax.psum_scatter(y, tuple(ax for ax, _ in pairs),
+                                 scatter_dimension=0, tiled=True)
+            x = y.reshape(y.shape[1:])
         elif kind == "gather_reduce":
             if st[2] != "prod":  # the only agg without a ring collective
                 raise ValueError(f"gather_reduce reducer {st[2]!r} unknown")
@@ -656,8 +822,8 @@ def make_spmd_runner(
                 v = _run_steps(v, prog.post_steps, sched.sizes)
             elif n.kind == "map":
                 v = engine.MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
-            else:
-                v = engine.OPAQUE_FNS[n.op](*args, **n.call_params)
+            else:  # opaque: the shard rule's per-device program
+                v = prog.run(args)
                 v = _run_steps(v, prog.post_steps, sched.sizes)
             vals[nid] = v
         return tuple(vals[o] for o in out_ids)

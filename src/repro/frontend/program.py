@@ -138,7 +138,11 @@ class Program:
         paper's power-of-two mode (plan only, no constraints); neither
         means no planning at all — a plain jit-compiled runner.  ``cache``
         is a ``PlanCache`` or a path to its JSON store; a hit skips the §8
-        DP entirely.  ``cost_model`` is ``"paper"`` or ``"collective"``.
+        DP entirely.  ``cost_model`` is ``"paper"``, ``"collective"``, or a
+        ``core.cost.CostModel`` instance — e.g.
+        ``CostModel.with_measured("costs.json")`` for pricing calibrated
+        from ``bench_spmd.py --emit-costs`` constants (the calibration
+        coefficients enter the plan-cache key).
 
         ``executor`` picks how the plan is realized (``engine.EXECUTORS``):
         ``"gspmd"`` lowers to sharding-constraint hints, ``"shard_map"``
@@ -147,7 +151,7 @@ class Program:
         executor's static collective schedule is exposed as
         ``CompiledProgram.collectives``.
         """
-        from repro.core.decomp import CostModel, eindecomp
+        from repro.core.decomp import eindecomp
         from repro.core.engine import EXECUTORS, mesh_axes_dict
         from repro.core.plancache import PlanCache
 
@@ -155,8 +159,9 @@ class Program:
             raise ValueError(f"compile: unknown executor {executor!r}; "
                              f"choose from {EXECUTORS}")
         cache = PlanCache.coerce(cache)
-        if isinstance(cost_model, CostModel):
-            cost_model = cost_model.mode
+        # cost_model may be "paper" / "collective" or a CostModel instance
+        # (e.g. CostModel.with_measured(...)); eindecomp handles both and
+        # keys the plan cache on the calibration coefficients.
         if mesh is not None and mesh_axes is None:
             mesh_axes = mesh_axes_dict(mesh)
         if executor == "shard_map" and mesh is None:
@@ -186,6 +191,10 @@ class CompiledProgram:
     names the execution strategy; for ``"shard_map"``, ``.collectives`` is
     the static ``CollectiveTrace`` (count + wire bytes per collective kind)
     the program will execute — for ``"gspmd"`` it is None (XLA decides).
+    ``.collectives_by_rule`` breaks the trace down per opaque shard rule
+    (``"ring"`` / ``"a2a"`` / ``"replicate"``; ``""`` is the einsum path),
+    and ``.collectives.rule_by_node`` records which rule lowered each
+    opaque node.
     """
 
     def __init__(self, program: Program, *, plan=None, mesh=None,
@@ -223,6 +232,12 @@ class CompiledProgram:
     @property
     def graph(self) -> EinGraph:
         return self.program.graph
+
+    @property
+    def collectives_by_rule(self) -> dict | None:
+        """{rule: {kind: {count, elems, bytes}}} for the shard_map executor
+        (None under gspmd) — the per-rule view of ``.collectives``."""
+        return None if self.collectives is None else self.collectives.by_rule()
 
     def __call__(self, feeds: Mapping[str, Any] | None = None, /,
                  **kw) -> dict[str, Any]:

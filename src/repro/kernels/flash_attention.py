@@ -44,6 +44,7 @@ def _flash_kernel(
     blk_q: int,
     blk_k: int,
     q_offset: int,
+    kv_offset: int,
 ):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -56,7 +57,7 @@ def _flash_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q_start = iq * blk_q + q_offset
-    k_start = ik * blk_k
+    k_start = ik * blk_k + kv_offset
 
     # block-level relevance: any (q, k) pair in this tile unmasked?
     relevant = True
@@ -111,6 +112,7 @@ def flash_attention(
     window: int = 0,
     scale: float | None = None,
     q_offset: int = 0,
+    kv_offset: int = 0,
     blk_q: int = 128,
     blk_k: int = 128,
     interpret: bool = True,
@@ -127,7 +129,7 @@ def flash_attention(
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        blk_q=blk_q, blk_k=blk_k, q_offset=q_offset)
+        blk_q=blk_q, blk_k=blk_k, q_offset=q_offset, kv_offset=kv_offset)
 
     return pl.pallas_call(
         kernel,
@@ -151,3 +153,154 @@ def flash_attention(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Ring-attention step: one kv block folded into carried (m, l, acc) state
+# ---------------------------------------------------------------------------
+
+
+def _flash_step_kernel(
+    offs_ref,                       # (1, 2) int32: [q_offset, kv_offset]
+    q_ref, k_ref, v_ref,            # inputs
+    m_in_ref, l_in_ref, acc_in_ref,  # carried state in
+    m_out_ref, l_out_ref, acc_out_ref,  # carried state out
+    m_s, l_s, acc_s,                # VMEM scratch (carried over kv grid dim)
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    blk_q: int,
+    blk_k: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = m_in_ref[0, 0][:, None]
+        l_s[...] = l_in_ref[0, 0][:, None]
+        acc_s[...] = acc_in_ref[0, 0]
+
+    q_start = iq * blk_q + offs_ref[0, 0]
+    k_start = ik * blk_k + offs_ref[0, 1]
+
+    # No block skipping here: every tile runs with the finite-NEG_INF mask
+    # so the state transition matches kernels/ref.py attention_step exactly
+    # (a fully-masked tile contributes weight exp(NEG_INF - m) == 0).
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (blk_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (blk_k, d)
+    s = jax.lax.dot_general(                               # (blk_q, blk_k)
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    if causal or window:
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = jnp.ones((blk_q, blk_k), dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[:, 0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0, 0].astype(jnp.float32)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_s[...] = acc_s[...] * alpha[:, None] + pv
+    m_s[:, 0] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        m_out_ref[0, 0] = m_s[:, 0]
+        l_out_ref[0, 0] = l_s[:, 0]
+        acc_out_ref[0, 0] = acc_s[...]
+
+
+def flash_attention_step(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk_blk, d) — one kv block of the ring
+    v: jnp.ndarray,  # (b, hkv, sk_blk, d)
+    carry: tuple | None = None,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    q_offset=0,      # absolute position of q[0]; int or traced scalar
+    kv_offset=0,     # absolute position of k[0]; int or traced scalar
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ring-attention step entry point: fold one kv block into the carried
+    online-softmax state ``(m, l, acc)``.
+
+    The offsets ride in as a (1, 2) int32 array, so they may be traced
+    values (``lax.axis_index`` arithmetic inside ``shard_map``) — the causal
+    / sliding-window masks compare against the block's *absolute* positions,
+    which is what keeps rotated kv blocks correctly masked at every ring
+    offset.  Finalize with ``ref.attention_finalize`` (acc / l).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, "GQA requires hq % hkv == 0"
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else float(scale)
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, "seq must divide block"
+    grid = (b, hq, sq // blk_q, sk // blk_k)
+
+    if carry is None:
+        m = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, hq, sq), jnp.float32)
+        acc = jnp.zeros((b, hq, sq, d), jnp.float32)
+    else:
+        m, l, acc = carry
+    offs = jnp.stack([jnp.asarray(q_offset, jnp.int32),
+                      jnp.asarray(kv_offset, jnp.int32)]).reshape(1, 2)
+
+    kernel = functools.partial(
+        _flash_step_kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda ib, ih, iq, ik: (0, 0)),
+            pl.BlockSpec((1, 1, blk_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, blk_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, blk_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, blk_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, blk_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, blk_q), lambda ib, ih, iq, ik: (ib, ih, iq)),
+            pl.BlockSpec((1, 1, blk_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # m
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # l
+            pltpu.VMEM((blk_q, d), jnp.float32),   # acc
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(offs, q, k, v, m, l, acc)

@@ -24,13 +24,34 @@ def _on_tpu() -> bool:
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None, q_offset=0,
-                    impl: str = "auto", blk_q: int = 128, blk_k: int = 128):
+                    kv_offset=0, impl: str = "auto",
+                    blk_q: int = 128, blk_k: int = 128):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.attention(q, k, v, causal=causal, window=window, scale=scale,
-                             q_offset=q_offset)
+                             q_offset=q_offset, kv_offset=kv_offset)
     return _fa.flash_attention(
         q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset,
-        blk_q=blk_q, blk_k=blk_k, interpret=not _on_tpu())
+        kv_offset=kv_offset, blk_q=blk_q, blk_k=blk_k, interpret=not _on_tpu())
+
+
+def flash_attention_step(q, k, v, carry=None, *, causal=True, window=0,
+                         scale=None, q_offset=0, kv_offset=0,
+                         impl: str = "auto", blk_q: int = 128, blk_k: int = 128):
+    """One ring-attention step: fold a kv block into carried (m, l, acc).
+    Offsets may be traced scalars (ring rotation inside shard_map)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.attention_step(q, k, v, carry, causal=causal, window=window,
+                                  scale=scale, q_offset=q_offset,
+                                  kv_offset=kv_offset)
+    return _fa.flash_attention_step(
+        q, k, v, carry, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, kv_offset=kv_offset, blk_q=blk_q, blk_k=blk_k,
+        interpret=not _on_tpu())
+
+
+def attention_finalize(carry, dtype):
+    """Normalize a carried (m, l, acc) ring state to the attention output."""
+    return ref.attention_finalize(carry, dtype)
 
 
 def matmul(x, w, *, impl: str = "auto", **blocks):

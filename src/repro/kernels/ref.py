@@ -22,6 +22,7 @@ def attention(
     window: int = 0,          # 0 = full; >0 = sliding window (causal)
     scale: float | None = None,
     q_offset: int = 0,        # absolute position of q[0] (decode steps)
+    kv_offset: int = 0,       # absolute position of k[0] (ring-rotated blocks)
 ) -> jnp.ndarray:
     """Multi-head (grouped-query) attention, numerically-safe softmax."""
     b, hq, sq, d = q.shape
@@ -33,20 +34,87 @@ def attention(
     ks = k.astype(jnp.float32)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qs, ks)
 
-    qpos = jnp.arange(sq) + q_offset
-    kpos = jnp.arange(sk)
-    mask = jnp.ones((sq, sk), dtype=bool)
-    if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
-    if window:
-        mask &= kpos[None, :] > qpos[:, None] - window
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    s = jnp.where(_mask(sq, sk, q_offset, kv_offset, causal, window)
+                  [None, None, None], s, NEG_INF)
 
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p / l, v.astype(jnp.float32))
     return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def _mask(sq, sk, q_offset, kv_offset, causal, window):
+    """(sq, sk) keep-mask for a (q block, kv block) pair at absolute
+    positions ``q_offset`` / ``kv_offset`` (both may be traced scalars)."""
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk) + kv_offset
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def attention_step(
+    q: jnp.ndarray,  # (b, hq, sq, d)
+    k: jnp.ndarray,  # (b, hkv, sk_blk, d)  — one kv block
+    v: jnp.ndarray,  # (b, hkv, sk_blk, d)
+    carry: tuple | None = None,  # (m, l, acc) from previous blocks, or None
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,        # absolute position of q[0] (may be traced)
+    kv_offset: int = 0,       # absolute position of k[0] (may be traced)
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One online-softmax step over a kv block: fold the block's scores into
+    the carried state ``(m, l, acc)`` (running max (b,hq,sq), normalizer
+    (b,hq,sq), unnormalized accumulator (b,hq,sq,d), all f32).
+
+    This is the ring-attention contract: chaining ``attention_step`` over
+    every kv block of the sequence (in any order, with the matching
+    ``kv_offset`` per block) and finalizing with ``attention_finalize``
+    reproduces dense ``attention`` exactly — including the finite-``NEG_INF``
+    convention for fully-masked rows, so partially- and fully-masked blocks
+    contribute 0 weight in the merge without any special-casing.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    qs = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qs, k.astype(jnp.float32))
+    s = jnp.where(_mask(sq, sk, q_offset, kv_offset, causal, window)
+                  [None, None, None], s, NEG_INF)
+    s = s.reshape(b, hq, sq, sk)
+
+    if carry is None:
+        m_prev = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+        l_prev = jnp.zeros((b, hq, sq), jnp.float32)
+        acc_prev = jnp.zeros((b, hq, sq, d), jnp.float32)
+    else:
+        m_prev, l_prev, acc_prev = carry
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])                  # (b, hq, sq, sk)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhgqk,bhkd->bhgqd",
+                    p.reshape(b, hkv, g, sq, sk), v.astype(jnp.float32))
+    acc_new = acc_prev * alpha[..., None] + pv.reshape(b, hq, sq, d)
+    return m_new, l_new, acc_new
+
+
+def attention_finalize(carry: tuple, dtype=jnp.float32) -> jnp.ndarray:
+    """(m, l, acc) -> normalized output (b, hq, sq, d).  ``l == 0`` (state
+    never touched by any block — possible only for chains that skipped
+    fully-masked tiles) yields 0, matching the Pallas kernel's convention."""
+    _, l, acc = carry
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(dtype)
 
 
 def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -38,35 +38,39 @@ from repro.models.policy import ShardingPolicy, policy_from_plan
 
 def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
                      decode: bool = False, kv_len: int = 0) -> ein.Expr:
+    """q/k/v are declared in the kernel's (batch, heads, seq, head_dim)
+    layout, so the opaque node's sequence label *is* the kernel's sequence
+    axis — what the ring shard rule rotates K/V blocks over — and its comm
+    declaration names the rule that realizes it (``rule: ring``)."""
     H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
     wq = ein.tensor("wq", "a h d", (D, H, hd))
-    q = ein.einsum("b s a, a h d -> b s h d", x, wq, name="q_proj")
+    q = ein.einsum("b s a, a h d -> b h s d", x, wq, name="q_proj")
     if decode:
-        kc = ein.tensor("k_cache", "b t k d", (B, kv_len, K, hd))
-        vc = ein.tensor("v_cache", "b t k d", (B, kv_len, K, hd))
+        kc = ein.tensor("k_cache", "b k t d", (B, K, kv_len, hd))
+        vc = ein.tensor("v_cache", "b k t d", (B, K, kv_len, hd))
         att = ein.opaque(
-            "flash_attention", [q, kc, vc], "b s h d", (B, S, H, hd),
-            in_labels=[("b", "s", "h", "d"), ("b", "t", "k", "d"),
-                       ("b", "t", "k", "d")],
+            "flash_attention", [q, kc, vc], "b h s d", (B, H, S, hd),
+            in_labels=[("b", "h", "s", "d"), ("b", "k", "t", "d"),
+                       ("b", "k", "t", "d")],
             shardable={"b", "h", "k", "t"},
-            comm=[{"kind": "ring", "label": "t", "input": 1},
-                  {"kind": "ring", "label": "t", "input": 2}],
+            comm=[{"kind": "ring", "label": "t", "input": 1, "rule": "ring"},
+                  {"kind": "ring", "label": "t", "input": 2, "rule": "ring"}],
             name="attn")
     else:
         wk = ein.tensor("wk", "a k d", (D, K, hd))
         wv = ein.tensor("wv", "a k d", (D, K, hd))
-        kk = ein.einsum("b s a, a k d -> b s k d", x, wk, name="k_proj")
-        vv = ein.einsum("b s a, a k d -> b s k d", x, wv, name="v_proj")
+        kk = ein.einsum("b s a, a k d -> b k s d", x, wk, name="k_proj")
+        vv = ein.einsum("b s a, a k d -> b k s d", x, wv, name="v_proj")
         att = ein.opaque(
-            "flash_attention", [q, kk, vv], "b s h d", (B, S, H, hd),
-            in_labels=[("b", "s", "h", "d"), ("b", "s", "k", "d"),
-                       ("b", "s", "k", "d")],
+            "flash_attention", [q, kk, vv], "b h s d", (B, H, S, hd),
+            in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                       ("b", "k", "s", "d")],
             shardable={"b", "h", "k", "s"},
-            comm=[{"kind": "ring", "label": "s", "input": 1},
-                  {"kind": "ring", "label": "s", "input": 2}],
+            comm=[{"kind": "ring", "label": "s", "input": 1, "rule": "ring"},
+                  {"kind": "ring", "label": "s", "input": 2, "rule": "ring"}],
             name="attn")
     wo = ein.tensor("wo", "h d a", (H, hd, D))
-    return ein.einsum("b s h d, h d a -> b s a", att, wo, name="o_proj")
+    return ein.einsum("b h s d, h d a -> b s a", att, wo, name="o_proj")
 
 
 def _ffn_nodes(x: ein.Expr, cfg, B: int, S: int,
@@ -95,8 +99,8 @@ def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
         "moe_dispatch", [x, route], "e c a", (E, C, D),
         in_labels=[("b", "s", "a"), ("b", "s", "e")],
         shardable={"e", "c", "b", "s"},
-        comm=[{"kind": "a2a", "label": "e", "input": 0},
-              {"kind": "a2a", "label": "c", "input": 0}],
+        comm=[{"kind": "a2a", "label": "e", "input": 0, "rule": "a2a"},
+              {"kind": "a2a", "label": "c", "input": 0, "rule": "a2a"}],
         name="dispatch")
     we1 = ein.tensor("we1", "e a f", (E, D, F))
     h = ein.einsum("e c a, e a f -> e c f", disp, we1, name="expert_up")
@@ -112,8 +116,11 @@ def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
         "moe_combine", [y, route], "b s a", (B, S, D),
         in_labels=[("e", "c", "a"), ("b", "s", "e")],
         shardable={"b", "s", "e", "c"},
-        comm=[{"kind": "a2a", "label": "e", "input": 0},
-              {"kind": "a2a", "label": "c", "input": 0}],
+        # the moved buffer is the token-sided *output* (input -1): combine
+        # returns each token its expert's result, it never moves the full
+        # (e, c, a) expert buffer
+        comm=[{"kind": "a2a", "label": "e", "input": -1, "rule": "a2a"},
+              {"kind": "a2a", "label": "c", "input": -1, "rule": "a2a"}],
         name="combine")
     if cfg.shared_expert_ff:
         sh = _ffn_nodes(x, cfg, B, S, d_ff=cfg.shared_expert_ff)

@@ -6,13 +6,22 @@ those suites pin that two execution paths realize the *same dataflow*, not
 the fused ops' numerics (which live with the real model stack in
 ``tests/test_models_smoke.py``).  One definition, so the test suite and the
 benchmark cannot silently validate different semantics.
+
+The MoE pair implements real (deterministic, top-1, capacity-dropped)
+token routing through ``core.opaque_rules.moe_route`` — the *same* helper
+the expert-parallel ``a2a`` shard rule builds its all_to_all program from.
+Dispatch places each kept token's raw activation at its global ``(expert,
+slot)``; combine gathers it back gate-weighted (dropped tokens contribute
+0).  That shared routing is what makes the dense replicated path and the
+sharded a2a path agree to fp tolerance.
 """
 from __future__ import annotations
 
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
+
+from repro.core.opaque_rules import moe_route
 
 
 def capacity_of(g) -> int:
@@ -32,15 +41,26 @@ def make_stub_opaques(capacity: int = 0) -> dict[str, Callable]:
         return jnp.cumsum(h, axis=1) / t
 
     def dispatch(x, route):
-        w = jax.nn.softmax(jnp.asarray(route), axis=-1)        # (b, s, e)
-        pooled = jnp.einsum("bsa,bse->ea", jnp.asarray(x), w)  # (e, a)
-        e = route.shape[-1]
-        return jnp.broadcast_to(pooled[:, None, :],
-                                (e, capacity, x.shape[-1])) / capacity
+        x = jnp.asarray(x)
+        b, s, d = x.shape
+        n_e = route.shape[-1]
+        expert, pos, _gate, _cnt = moe_route(route)
+        keep = pos < capacity
+        xt = jnp.swapaxes(x, 0, 1).reshape(s * b, d)
+        e_idx = jnp.where(keep, expert, 0)
+        c_idx = jnp.where(keep, pos, 0)
+        out = jnp.zeros((n_e, capacity, d), x.dtype)
+        return out.at[e_idx, c_idx].add(xt * keep[:, None].astype(x.dtype))
 
     def combine(y, route):
-        w = jax.nn.softmax(jnp.asarray(route), axis=-1)
-        return jnp.einsum("eca,bse->bsa", jnp.asarray(y), w) / y.shape[1]
+        y = jnp.asarray(y)
+        _, cap, d = y.shape
+        b, s, _ = route.shape
+        expert, pos, gate, _cnt = moe_route(route)
+        keep = pos < cap
+        vals = y[jnp.where(keep, expert, 0), jnp.where(keep, pos, 0)]
+        vals = vals * (gate * keep).astype(y.dtype)[:, None]
+        return jnp.swapaxes(vals.reshape(s, b, d), 0, 1)
 
     return {"ssm_scan": cumnorm, "mlstm_scan": cumnorm, "slstm_scan": cumnorm,
             "moe_dispatch": dispatch, "moe_combine": combine}
