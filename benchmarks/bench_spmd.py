@@ -9,10 +9,13 @@ For every model-zoo family (plus a plain MLP):
      (ring-priced).  The plan cost is an upper bound — ``traced <=
      predicted`` is the property that makes the DP's prices trustworthy
      (Deinsum's argument: emit the schedule you costed).  With ``--check``
-     the bound is additionally asserted **per ring/a2a-ruled opaque node**
-     against ``decomp.opaque_node_bound`` — i.e. ring attention and a2a
+     the bound is additionally asserted **per ring/a2a/local-ruled opaque
+     node** against ``decomp.opaque_node_bound`` — ring attention and a2a
      expert parallelism never fall back to gathering full K/V or token
-     buffers;
+     buffers, and the channel-parallel recurrent scans (ssm/mlstm/slstm,
+     the ``local`` rule) move **zero** wire elements on channel-only
+     sharding, where the old replicate fallback gathered full state (the
+     scan-family rows land in BENCH_spmd.json alongside ring/a2a);
   3. time both executors end-to-end (jit warm, best of N).
 
 Rows print as ``SPMDROW <arch> ...`` so CI logs diff commit over commit,
@@ -43,7 +46,6 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.configs.base import ShapeConfig
-from repro.core import engine
 from repro.core.decomp import opaque_node_bound, plan_cost
 from repro.launch.mesh import make_host_mesh
 from repro.models.eingraphs import program_for
@@ -86,8 +88,8 @@ def bench_cell(arch: str, reps: int, check: bool) -> dict:
     shape = ShapeConfig("bench", "prefill", 32, 4)
     prog = program_for(cfg, shape)
     g = prog.graph
-    for kind, fn in make_stub_opaques(capacity_of(g)).items():
-        engine.register_opaque(kind, fn)
+    # registers through the unified OpDef path (opdef.provide_impl)
+    make_stub_opaques(capacity_of(g))
     mesh = make_host_mesh((2, 4))
 
     # one §8 DP per cell: the second compile is a plan-cache hit, and the
@@ -151,12 +153,19 @@ def bench_cell(arch: str, reps: int, check: bool) -> dict:
             f"plan_cost bound {predicted:,}")
         assert max_diff < 2e-3, f"{arch}: executors diverge ({max_diff})"
         for o in opaques:
-            if o["rule"] in ("ring", "a2a"):
+            if o["rule"] in ("ring", "a2a", "local"):
                 assert o["traced_elems"] <= o["bound_elems"], (
                     f"{arch}/{o['name']}: {o['rule']} rule moved "
                     f"{o['traced_elems']:,} elems, over its "
                     f"_opaque_comm_cost bound {o['bound_elems']:,} — the "
                     "realized schedule diverged from the priced one")
+            if o["rule"] == "local" and o["name"].endswith("_scan"):
+                # the scan-family property: a local scan per channel shard
+                # moves nothing, where replication gathered full state
+                assert o["traced_elems"] == 0, (
+                    f"{arch}/{o['name']}: channel-parallel scan moved "
+                    f"{o['traced_elems']:,} wire elems (expected 0 on "
+                    "channel-only sharding)")
     return row
 
 
@@ -231,7 +240,7 @@ def _bench_rows(rows: list[dict]) -> list[dict]:
              "value": r["predicted_elems"], "unit": "elems"},
         ]
         for o in r["opaques"]:
-            if o["rule"] in ("ring", "a2a"):
+            if o["rule"] in ("ring", "a2a", "local"):
                 out.append({"name": f"spmd/{a}/opaque/{o['name']}",
                             "metric": "wire_elems",
                             "value": o["traced_elems"], "unit": "elems"})

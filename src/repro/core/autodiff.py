@@ -9,7 +9,12 @@ Reverse-mode accumulation where every adjoint is itself an EinSum node:
       lZ ∪ lY (a label aggregated out of X alone).
 * elementwise add/sub: adjoints pass through (negated for the sub rhs).
 * elementwise mul: dX = dZ ⊙ Y.
-* map f: dX = dZ ⊙ f'(x) — f' from the GRAD_MAPS registry.
+* map f: dX = dZ ⊙ f'(x) — f' from the map op's OpDef ``grad`` link
+  (the historical GRAD_MAPS registry, now a view over core/opdef.py).
+* opaque f: the OpDef's VJP rule (``vjp="auto"`` emits derived
+  ``<kind>@vjp<i>`` opaque nodes executed through ``jax.vjp`` of the
+  forward impl; custom rules build arbitrary backward structure) — an
+  OpDef without a VJP raises an actionable error naming the op.
 
 The result is a plain EinGraph (forward + backward nodes), so the same
 EinDecomp DP plans fwd+bwd jointly — exactly the paper's FFNN experiment.
@@ -19,64 +24,15 @@ from __future__ import annotations
 import copy
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import engine
+from repro.core import opdef
 from repro.core.einsum import EinGraph, EinSpec
 
-# local derivatives for map nodes: name -> name of the derivative map.
-# Every *elementwise* op in engine.MAP_FNS must have an entry — grad_graph
-# raises KeyError-shaped NotImplementedError otherwise (the neg/add_const
-# regression: registered map ops nobody could differentiate through).
-# softmax_last is deliberately absent: its Jacobian is not diagonal, so it
-# is not GRAD_MAPS-eligible (grad_graph raises NotImplementedError).
-GRAD_MAPS = {
-    "relu": "relu_grad",
-    "relu2": "relu2_grad",
-    "silu": "silu_grad",
-    "tanh": "tanh_grad",
-    "sigmoid": "sigmoid_grad",
-    "exp": "exp",          # d/dx e^x = e^x
-    "square": "two_x",
-    "scale": "scale_grad",
-    "id": "one",
-    "gelu": "gelu_grad",
-    "neg": "neg_one",      # d/dx (-x) = -1
-    "add_const": "one",    # d/dx (x + c) = 1
-    "rsqrt_eps": "rsqrt_eps_grad",
-    "cast_f32": "one",
-}
-
-engine.MAP_FNS.update({
-    "relu_grad": lambda x: (jnp.asarray(x) > 0).astype(jnp.asarray(x).dtype),
-    "relu2_grad": lambda x: 2 * jnp.maximum(jnp.asarray(x), 0),
-    "silu_grad": lambda x: jax.grad(lambda v: jnp.sum(jax.nn.silu(v)))(jnp.asarray(x)),
-    "tanh_grad": lambda x: 1 - jnp.tanh(jnp.asarray(x)) ** 2,
-    "sigmoid_grad": lambda x: jax.nn.sigmoid(jnp.asarray(x))
-    * (1 - jax.nn.sigmoid(jnp.asarray(x))),
-    "two_x": lambda x: 2 * jnp.asarray(x),
-    "scale_grad": lambda x, c=1.0: jnp.full_like(jnp.asarray(x), c),
-    "one": lambda x, **_: jnp.ones_like(jnp.asarray(x)),
-    "gelu_grad": lambda x: jax.grad(lambda v: jnp.sum(jax.nn.gelu(v)))(jnp.asarray(x)),
-    "neg_one": lambda x: jnp.full_like(jnp.asarray(x), -1),
-    # d/dx (x + eps)^(-1/2) = -1/2 (x + eps)^(-3/2)
-    "rsqrt_eps_grad": lambda x, eps=1e-6: (
-        -0.5 * jax.lax.rsqrt(jnp.asarray(x) + eps) / (jnp.asarray(x) + eps)),
-})
-
-engine.OPAQUE_FNS["broadcast_to"] = lambda x, labels=(), shape=(), src_labels=(): (
-    _broadcast(jnp.asarray(x), src_labels, labels, shape))
-
-
-def _broadcast(x, src_labels, out_labels, out_shape):
-    src = list(src_labels)
-    for l in out_labels:
-        if l not in src:
-            x = x[..., None]
-            src.append(l)
-    x = jnp.transpose(x, [src.index(l) for l in out_labels])
-    return jnp.broadcast_to(x, tuple(out_shape))
+#: map kind -> derivative map kind.  A live view over the unified OpDef
+#: registry (every builtin elementwise map declares its grad link in
+#: core/opdefs_builtin.py; tests/test_autodiff_gradmaps.py pins coverage).
+#: softmax_last is deliberately grad-less: its Jacobian is not diagonal,
+#: so it is not derivative-map eligible (grad_graph raises).
+GRAD_MAPS = opdef.GRAD_MAPS
 
 
 def grad_graph(
@@ -157,13 +113,18 @@ def grad_graph(
         elif n.kind == "map":
             gname = GRAD_MAPS.get(n.op)
             if gname is None:
-                raise NotImplementedError(f"grad for map {n.op}")
+                raise NotImplementedError(
+                    f"grad for map {n.op}: its OpDef declares no grad link "
+                    "(ein.defop(..., category='map', grad='<kind>'))")
             local = gg.map(gname, n.inputs[0], **n.params)
             s = " ".join(n.labels)
             d = gg.einsum(f"{s}, {s} -> {s}", dz, local, combine="mul", agg="")
             adj.setdefault(n.inputs[0], []).append(d)
         else:
-            raise NotImplementedError(f"grad through opaque {n.op}")
+            # opaque: the OpDef's VJP rule builds the backward nodes
+            for a, d in zip(n.inputs, opdef.build_vjp(gg, n, dz)):
+                if d is not None:
+                    adj.setdefault(a, []).append(d)
 
     grads: dict[int, int] = {}
     for w in wrt:

@@ -642,7 +642,10 @@ def _in_labels_of(m: Node):
 def _opaque_comm_cost(g: EinGraph, n: Node, d: dict[str, int],
                       bounds: dict[str, int], p: int | None = None) -> int:
     """Internal communication of fused opaque ops (beyond-paper: the paper
-    has no opaque nodes).  Declared via node.params["comm"] =
+    has no opaque nodes).  The declaration comes from the op's **OpDef**
+    (``opdef.comm_for_node``: the registered comm template renamed into the
+    node's instance labels; an explicit per-node ``params["comm"]`` still
+    overrides), as entries
     [{"kind": "ring"|"a2a", "label": l, "input": i, "rule": name?}, ...]
     where ``input`` is an input index, or ``-1`` for the node's own output
     (the moved buffer of a combine-style op is its token-sided result, not
@@ -669,7 +672,9 @@ def _opaque_comm_cost(g: EinGraph, n: Node, d: dict[str, int],
     kind's namesake), so pricing and lowering resolve the same schedule;
     ``eindecomp`` validates the resolution at plan time.
     """
-    comm = n.params.get("comm")
+    from repro.core.opdef import comm_for_node
+
+    comm = comm_for_node(n)
     if not comm:
         return 0
     total = 0

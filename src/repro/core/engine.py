@@ -82,62 +82,25 @@ def lower_einsum(spec: EinSpec, *args):
 
 
 # ---------------------------------------------------------------------------
-# map / opaque registries (shared with the dense numpy oracle, which calls
-# them with numpy arrays — all fns must be backend-polymorphic via jnp).
+# map / opaque execution registries.  Since the OpDef redesign these are
+# *live views* over the one unified registry (core/opdef.py): built-in ops
+# are declared in core/opdefs_builtin.py, new ops through ``ein.defop``.
+# The views stay dict-compatible (shared with the dense numpy oracle — all
+# impls are backend-polymorphic via jnp) so in-core callers and test
+# monkeypatching keep working; direct use outside core/ is lint-banned.
 # ---------------------------------------------------------------------------
 
-
-def _softmax(x, axis=-1):
-    x = jnp.asarray(x)
-    m = jnp.max(x, axis=axis, keepdims=True)
-    e = jnp.exp(x - m)
-    return e / jnp.sum(e, axis=axis, keepdims=True)
-
-
-def _rsqrt_eps(x, eps=1e-6):
-    return jax.lax.rsqrt(jnp.asarray(x) + eps)
-
-
-MAP_FNS: dict[str, Callable] = {
-    "id": lambda x: jnp.asarray(x),
-    "exp": lambda x: jnp.exp(jnp.asarray(x)),
-    "neg": lambda x: -jnp.asarray(x),
-    "relu": lambda x: jnp.maximum(jnp.asarray(x), 0),
-    "relu2": lambda x: jnp.square(jnp.maximum(jnp.asarray(x), 0)),
-    "silu": lambda x: jax.nn.silu(jnp.asarray(x)),
-    "gelu": lambda x: jax.nn.gelu(jnp.asarray(x)),
-    "scale": lambda x, c=1.0: jnp.asarray(x) * c,
-    "add_const": lambda x, c=0.0: jnp.asarray(x) + c,
-    "rsqrt_eps": _rsqrt_eps,
-    "softmax_last": lambda x: _softmax(x, axis=-1),
-    "sigmoid": lambda x: jax.nn.sigmoid(jnp.asarray(x)),
-    "tanh": lambda x: jnp.tanh(jnp.asarray(x)),
-    "square": lambda x: jnp.square(jnp.asarray(x)),
-    "cast_f32": lambda x: jnp.asarray(x, jnp.float32),
-}
-
-
-def _op_flash_attention(q, k, v, causal=True, window=0, scale=None):
-    """Reference attention for the opaque node (b h s d layout).  The Pallas
-    kernel (kernels/flash_attention.py) replaces this on TPU."""
-    from repro.kernels import ops
-
-    return ops.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
-                               causal=causal, window=window, scale=scale)
-
-
-def _op_gather_rows(table, ids):
-    return jnp.take(jnp.asarray(table), jnp.asarray(ids).astype(jnp.int32), axis=0)
-
-
-OPAQUE_FNS: dict[str, Callable] = {
-    "flash_attention": _op_flash_attention,
-    "gather_rows": _op_gather_rows,
-}
+from repro.core.opdef import MAP_FNS, OPAQUE_FNS  # noqa: E402
 
 
 def register_opaque(name: str, fn: Callable) -> None:
-    OPAQUE_FNS[name] = fn
+    """Deprecated: register through the unified OpDef API instead —
+    ``ein.defop(name, "<signature>", fn=...)`` bundles the signature, dense
+    impl, kernel dispatcher, VJP, comm declaration, and shard rule in one
+    record (this shim installs a bare impl with none of that metadata)."""
+    from repro.core import opdef
+
+    opdef.register_legacy(name, fn, surface="engine.register_opaque")
 
 
 # ---------------------------------------------------------------------------

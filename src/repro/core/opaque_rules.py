@@ -26,18 +26,28 @@ Built-in rules (the registry; ``register_rule`` admits new ones):
                   via a (tiny) all-gather of per-expert counts, and token
                   payloads cross a real ``lax.all_to_all`` to/from the
                   expert-sharded buffers — never a full token-buffer gather.
+  ``local``     — channel-parallel fused ops: the op declares (by binding
+                  this rule in its OpDef) that it is independent along
+                  every shardable label, so each device runs the dense
+                  impl on its local blocks with **zero collectives**.
+                  This is what the recurrent scans (ssm/mlstm/slstm) bind:
+                  the sequence label is non-shardable (recurrence), the
+                  channel labels shard freely — a local scan per channel
+                  shard, where the old fallback gathered full state.
   ``replicate`` — the fallback: gather inputs, run the fused op densely on
                   every device, re-slice the output to the plan layout
                   (free local slices).  Used for every opaque op without a
-                  ``comm``-declared rule (recurrent scans, embedding
-                  gathers) and whenever a rule's structural preconditions
-                  fail (it returns ``None`` from ``lower``).
+                  declared rule (embedding gathers, derived VJP ops) and
+                  whenever a rule's structural preconditions fail (it
+                  returns ``None`` from ``lower``).
 
-A rule resolves from the node's ``comm`` declaration: each entry may name
-its ``rule`` explicitly; entries without one derive it from ``kind``
-(``ring``→ring, ``a2a``→a2a).  ``validate_graph`` runs at plan time
-(``eindecomp``) so a plan can never price a schedule the executor cannot
-resolve.
+A rule resolves from the node's **OpDef** (core/opdef.py): the comm
+declaration's entries may name their ``rule`` explicitly, entries without
+one derive it from ``kind`` (``ring``→ring, ``a2a``→a2a), and comm-less
+OpDefs may bind a ``shard_rule`` directly (the scans' ``local``).  An
+explicit per-node ``params["comm"]`` still overrides the OpDef template.
+``validate_graph`` runs at plan time (``eindecomp``) so a plan can never
+price a schedule the executor cannot resolve.
 """
 from __future__ import annotations
 
@@ -110,16 +120,20 @@ def get_rule(name: str) -> OpaqueShardRule:
 
 
 def resolve_rule_name(node: Node) -> str:
-    """Rule name declared by the node's ``comm`` entries (explicit ``rule``
-    key, else derived from ``kind``); ``replicate`` when undeclared."""
-    comm = node.params.get("comm") or []
+    """Rule name declared for a node: its comm entries (explicit ``rule``
+    key, else derived from ``kind``), falling back to the OpDef's bound
+    ``shard_rule``; ``replicate`` when nothing is declared.  The comm
+    declaration itself resolves through the OpDef
+    (``opdef.comm_for_node``); explicit node params still override."""
+    from repro.core import opdef
+
     names = set()
-    for entry in comm:
+    for entry in opdef.comm_for_node(node):
         name = entry.get("rule") or _KIND_TO_RULE.get(entry.get("kind"))
         if name is not None:
             names.add(name)
     if not names:
-        return "replicate"
+        return opdef.shard_rule_for_node(node) or "replicate"
     if len(names) > 1:
         raise ValueError(
             f"node {node.name!r}: comm entries declare conflicting shard "
@@ -128,13 +142,16 @@ def resolve_rule_name(node: Node) -> str:
 
 
 def validate_graph(g: EinGraph) -> None:
-    """Plan-time validation: every opaque node's comm declaration must
-    resolve to a registered rule with known kinds, so the DP never prices a
-    schedule the executor cannot lower."""
+    """Plan-time validation: every opaque node's declaration (OpDef comm
+    template or per-node override) must resolve to a registered rule with
+    known kinds, so the DP never prices a schedule the executor cannot
+    lower."""
+    from repro.core import opdef
+
     for n in g.nodes:
         if n.kind != "opaque":
             continue
-        for entry in (n.params.get("comm") or []):
+        for entry in opdef.comm_for_node(n):
             if entry.get("kind") not in _KIND_TO_RULE:
                 raise ValueError(
                     f"node {n.name!r}: comm kind {entry.get('kind')!r} "
@@ -236,6 +253,67 @@ class ReplicateRule:
 
 
 # ---------------------------------------------------------------------------
+# local: channel-parallel fused ops (recurrent scans) — zero collectives
+# ---------------------------------------------------------------------------
+
+
+class LocalRule:
+    """Run the fused op on local blocks, no movement at all.
+
+    An OpDef binds this rule to assert the op is *independent along every
+    shardable label*: the local block of the output equals the global op
+    applied to the local blocks of the inputs.  That is exactly the
+    recurrent scans' structure — the scan runs along the (non-shardable)
+    sequence label, the channel/batch labels are elementwise-independent —
+    so sharding only channel labels costs zero collectives, where the
+    replicate fallback gathered the full state on every device.
+
+    Structural preconditions (``None`` → replicate): per-input labels are
+    declared; a sharded label appearing in an input must also appear in
+    the output (otherwise local blocks cannot compose the global result);
+    every sharded label's extent divides its shard count.
+    """
+
+    name = "local"
+
+    def lower(self, g, node, ax_n, sizes):
+        if not node.in_labels or len(node.in_labels) != len(node.inputs):
+            return None
+
+        def norm(label):
+            return _spmd._norm_axes(ax_n.get(label, ()), sizes)
+
+        in_label_set = {l for ls in node.in_labels for l in ls}
+        arg_layouts: list[Layout] = []
+        for ls, a in zip(node.in_labels, node.inputs):
+            lay = []
+            for l, b in zip(ls, g.nodes[a].shape):
+                axes = norm(l)
+                if axes and l not in node.labels:
+                    return None  # sharded label vanishes: not local
+                if b % max(_prod(sizes[x] for x in axes), 1):
+                    return None
+                lay.append(axes)
+            arg_layouts.append(tuple(lay))
+        out_layout = []
+        for l, b in zip(node.labels, node.shape):
+            axes = norm(l)
+            if axes and l not in in_label_set:
+                return None  # output-only sharded label: nothing to slice by
+            if b % max(_prod(sizes[x] for x in axes), 1):
+                return None
+            out_layout.append(axes)
+
+        def run(args):
+            from repro.core import opdef
+
+            return opdef.executable(node.op)(*args, **node.call_params)
+
+        return RuleLowering(arg_layouts=arg_layouts,
+                            out_layout=tuple(out_layout), run=run)
+
+
+# ---------------------------------------------------------------------------
 # ring: sequence-parallel flash attention
 # ---------------------------------------------------------------------------
 
@@ -262,7 +340,9 @@ class RingAttentionRule:
         lq, lk, lv = node.in_labels
         if lk != lv:
             return None
-        ring_labels = {c["label"] for c in (node.params.get("comm") or [])
+        from repro.core import opdef
+
+        ring_labels = {c["label"] for c in opdef.comm_for_node(node)
                        if c.get("kind") == "ring"}
         if len(ring_labels) != 1:
             return None
@@ -528,5 +608,6 @@ class A2AMoERule:
 
 
 register_rule(ReplicateRule())
+register_rule(LocalRule())
 register_rule(RingAttentionRule())
 register_rule(A2AMoERule())

@@ -1,0 +1,204 @@
+"""The built-in op catalog: every map and opaque op the stack ships with,
+declared through the unified OpDef API (core/opdef.py).
+
+This module is imported lazily on first registry access
+(``opdef._ensure_builtins``).  Each entry is one declarative record —
+signature, dense reference impl, optional accelerator kernel dispatcher,
+VJP rule, comm declaration, shard-rule binding — replacing the five
+separate registries that previously held these pieces (``engine.MAP_FNS``
+/ ``engine.OPAQUE_FNS`` / ``autodiff.GRAD_MAPS`` / ``opaque_rules`` comm
+dicts / per-call model-builder metadata).
+
+All impls are backend-polymorphic via jnp (the dense numpy oracle calls
+them with numpy arrays).  MoE dispatch/combine and the recurrent scans are
+*declared* here but carry no production impl — ``models/opaque_stubs``
+provides the deterministic reference semantics through
+``opdef.provide_impl`` (checked against the signatures declared here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opdef import defop
+
+# ---------------------------------------------------------------------------
+# Elementwise map ops (+ their derivative maps, linked via grad=)
+# ---------------------------------------------------------------------------
+
+
+def _softmax(x, axis=-1):
+    x = jnp.asarray(x)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def _rsqrt_eps(x, eps=1e-6):
+    return jax.lax.rsqrt(jnp.asarray(x) + eps)
+
+
+_MAPS: dict[str, tuple] = {
+    # kind: (fn, derivative map kind or None)
+    "id": (lambda x: jnp.asarray(x), "one"),
+    "exp": (lambda x: jnp.exp(jnp.asarray(x)), "exp"),  # d/dx e^x = e^x
+    "neg": (lambda x: -jnp.asarray(x), "neg_one"),
+    "relu": (lambda x: jnp.maximum(jnp.asarray(x), 0), "relu_grad"),
+    "relu2": (lambda x: jnp.square(jnp.maximum(jnp.asarray(x), 0)),
+              "relu2_grad"),
+    "silu": (lambda x: jax.nn.silu(jnp.asarray(x)), "silu_grad"),
+    "gelu": (lambda x: jax.nn.gelu(jnp.asarray(x)), "gelu_grad"),
+    "scale": (lambda x, c=1.0: jnp.asarray(x) * c, "scale_grad"),
+    "add_const": (lambda x, c=0.0: jnp.asarray(x) + c, "one"),
+    "rsqrt_eps": (_rsqrt_eps, "rsqrt_eps_grad"),
+    # softmax_last is deliberately grad-less: its Jacobian is not diagonal,
+    # so it is not derivative-map eligible (grad_graph raises).
+    "softmax_last": (lambda x: _softmax(x, axis=-1), None),
+    "sigmoid": (lambda x: jax.nn.sigmoid(jnp.asarray(x)), "sigmoid_grad"),
+    "tanh": (lambda x: jnp.tanh(jnp.asarray(x)), "tanh_grad"),
+    "square": (lambda x: jnp.square(jnp.asarray(x)), "two_x"),
+    "cast_f32": (lambda x: jnp.asarray(x, jnp.float32), "one"),
+}
+
+#: derivative-only helper maps (no grad links of their own)
+_DERIV_MAPS = {
+    "relu_grad": lambda x: (jnp.asarray(x) > 0).astype(jnp.asarray(x).dtype),
+    "relu2_grad": lambda x: 2 * jnp.maximum(jnp.asarray(x), 0),
+    "silu_grad": lambda x: jax.grad(
+        lambda v: jnp.sum(jax.nn.silu(v)))(jnp.asarray(x)),
+    "tanh_grad": lambda x: 1 - jnp.tanh(jnp.asarray(x)) ** 2,
+    "sigmoid_grad": lambda x: jax.nn.sigmoid(jnp.asarray(x))
+    * (1 - jax.nn.sigmoid(jnp.asarray(x))),
+    "two_x": lambda x: 2 * jnp.asarray(x),
+    "scale_grad": lambda x, c=1.0: jnp.full_like(jnp.asarray(x), c),
+    "one": lambda x, **_: jnp.ones_like(jnp.asarray(x)),
+    "gelu_grad": lambda x: jax.grad(
+        lambda v: jnp.sum(jax.nn.gelu(v)))(jnp.asarray(x)),
+    "neg_one": lambda x: jnp.full_like(jnp.asarray(x), -1),
+    # d/dx (x + eps)^(-1/2) = -1/2 (x + eps)^(-3/2)
+    "rsqrt_eps_grad": lambda x, eps=1e-6: (
+        -0.5 * jax.lax.rsqrt(jnp.asarray(x) + eps) / (jnp.asarray(x) + eps)),
+}
+
+# check_impl=False everywhere below: invoking an impl initializes the jax
+# backend, and loading this catalog must stay legal from the pure-planning
+# path (a metadata-only registry consumer).  tests/test_opdef.py sweeps
+# opdef.check_impl over every builtin instead.
+# derivative helpers first: defop validates grad= links eagerly
+for _kind, _fn in _DERIV_MAPS.items():
+    defop(_kind, None, fn=_fn, category="map")
+for _kind, (_fn, _grad) in _MAPS.items():
+    defop(_kind, None, fn=_fn, grad=_grad, category="map")
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: signature over (batch, heads, kv-heads, q-seq, ring
+# label, head_dim); the ring label ``l`` is what K/V circulate over — the
+# model builders rename it to ``s`` (prefill, shared with q) or ``t``
+# (decode, the kv-cache time label).
+# ---------------------------------------------------------------------------
+
+
+def _flash_attention_ref(q, k, v, causal=True, window=0, scale=None):
+    """Dense reference (b h s d layout), jnp everywhere."""
+    from repro.kernels import ops
+
+    return ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), causal=causal, window=window,
+                               scale=scale, impl="ref")
+
+
+def _flash_attention_kernel(q, k, v, causal=True, window=0, scale=None):
+    """Accelerator dispatcher (kernels/ops.py): Pallas on TPU, the jnp
+    reference elsewhere — what execution actually calls."""
+    from repro.kernels import ops
+
+    return ops.flash_attention(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), causal=causal, window=window,
+                               scale=scale)
+
+
+defop(
+    "flash_attention", "b h s d, b k l d, b k l d -> b h s d",
+    fn=_flash_attention_ref, kernel=_flash_attention_kernel, vjp="auto",
+    check_impl=False, shardable="b h k l",
+    comm=[{"kind": "ring", "label": "l", "input": 1},
+          {"kind": "ring", "label": "l", "input": 2}],
+    shard_rule="ring")
+
+
+# ---------------------------------------------------------------------------
+# Embedding gather: rows of a (vocab, d_model) table by int ids.  The ids
+# are int32 (in_dtypes steers the registration check) and carry no
+# gradient; the table grads flow through the auto VJP (a scatter-add).
+# ---------------------------------------------------------------------------
+
+
+def _gather_rows(table, ids):
+    return jnp.take(jnp.asarray(table), jnp.asarray(ids).astype(jnp.int32),
+                    axis=0)
+
+
+defop("gather_rows", "v a, b s -> b s a", fn=_gather_rows, vjp="auto",
+      check_impl=False, shardable="b s a", in_dtypes=(None, "int32"))
+
+
+# ---------------------------------------------------------------------------
+# broadcast_to: the autodiff adjoint carrier (labels/shape arrive as call
+# params — fully dynamic, so no signature and no inference).
+# ---------------------------------------------------------------------------
+
+
+def _broadcast(x, src_labels, out_labels, out_shape):
+    src = list(src_labels)
+    for l in out_labels:
+        if l not in src:
+            x = x[..., None]
+            src.append(l)
+    x = jnp.transpose(x, [src.index(l) for l in out_labels])
+    return jnp.broadcast_to(x, tuple(out_shape))
+
+
+defop("broadcast_to", None,
+      fn=lambda x, labels=(), shape=(), src_labels=(): (
+          _broadcast(jnp.asarray(x), src_labels, labels, shape)))
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch / combine: expert-parallel a2a schedule.  The capacity
+# dimension ``c`` appears in no input — it binds from the ``capacity``
+# call param (param_bounds).  Impls are provided by models/opaque_stubs
+# (deterministic top-1 routing shared with the a2a shard rule).
+# ---------------------------------------------------------------------------
+
+defop(
+    "moe_dispatch", "b s a, b s e -> e c a",
+    shardable="e c b s", param_bounds={"c": "capacity"},
+    comm=[{"kind": "a2a", "label": "e", "input": 0},
+          {"kind": "a2a", "label": "c", "input": 0}],
+    shard_rule="a2a")
+
+defop(
+    "moe_combine", "e c a, b s e -> b s a",
+    shardable="e c b s",
+    # the moved buffer is the token-sided *output* (input -1): combine
+    # returns each token its expert's result, it never moves the full
+    # (e, c, a) expert buffer
+    comm=[{"kind": "a2a", "label": "e", "input": -1},
+          {"kind": "a2a", "label": "c", "input": -1}],
+    shard_rule="a2a")
+
+
+# ---------------------------------------------------------------------------
+# Recurrent scans: sequence label is non-partitionable (recurrence), but
+# the channel labels are — mLSTM/SSM chunkwise forms are channel-local, so
+# the ``local`` shard rule runs the scan per channel shard with zero
+# collectives (sLSTM's dense recurrent matrix couples the whole width, so
+# only b shards).  Impls from models/opaque_stubs.
+# ---------------------------------------------------------------------------
+
+for _scan in ("ssm_scan", "mlstm_scan"):
+    defop(_scan, "b s f -> b s f", shardable="b f", shard_rule="local",
+          vjp="auto")
+defop("slstm_scan", "b s f -> b s f", shardable="b", shard_rule="local",
+      vjp="auto")

@@ -12,12 +12,21 @@
 ``expr.py`` holds the lazy symbolic-tensor layer (declaration + trace into
 the EinGraph IR), ``program.py`` the Program/CompiledProgram lifecycle
 (graph → plan → cache → runner).
+
+New fused ops are declared once through the unified OpDef API —
+``ein.defop`` (or the ``@ein.op`` decorator): one record bundling the
+einsum-style label signature, dense impl, optional accelerator kernel,
+VJP rule, comm declaration, and shard-rule binding.  ``ein.opaque`` then
+infers shapes/labels from the signature, ``Program.grad`` differentiates
+through the op, the DP prices its comm, and the shard_map executor lowers
+it per shard.  (``register_opaque`` survives as a deprecation shim.)
 """
-from repro.frontend.expr import (Expr, einsum, map_, maximum, opaque,
-                                 register_opaque, tensor, trace)
+from repro.frontend.expr import (Expr, defop, einsum, map_, maximum, op,
+                                 opaque, register_opaque, tensor, trace)
 from repro.frontend.program import CompiledProgram, LoweredProgram, Program
 
 __all__ = [
-    "Expr", "einsum", "map_", "maximum", "opaque", "register_opaque",
-    "tensor", "trace", "Program", "CompiledProgram", "LoweredProgram",
+    "Expr", "defop", "einsum", "map_", "maximum", "op", "opaque",
+    "register_opaque", "tensor", "trace", "Program", "CompiledProgram",
+    "LoweredProgram",
 ]

@@ -137,7 +137,8 @@ class Expr:
         return NotImplemented
 
     def map(self, fn: str, *, name: str = "", **params) -> "Expr":
-        """Unary elementwise map (``relu``, ``scale``, … — engine.MAP_FNS)."""
+        """Unary elementwise map (``relu``, ``scale``, … — the map-category
+        ops of the OpDef registry, ``opdef.list_ops("map")``)."""
         return Expr("map", self.labels, self.shape, self.dtype,
                     name=name, args=(self,), op=fn, params=params)
 
@@ -198,17 +199,59 @@ def einsum(expr: str, *args: Expr, combine: str | None = None,
                 name=name, args=args, spec=spec)
 
 
-def opaque(kind: str, args: Sequence[Expr], out_labels: str | Sequence[str],
-           out_shape: Sequence[int], *, in_labels: Sequence[Sequence[str]] = (),
+def opaque(kind: str, args: Sequence[Expr],
+           out_labels: str | Sequence[str] | None = None,
+           out_shape: Sequence[int] | None = None, *,
+           in_labels: Sequence[Sequence[str]] = (),
            shardable: Iterable[str] | None = None, dtype=None,
            name: str = "", **params) -> Expr:
     """A fused op the notation cannot express (flash attention, MoE
-    dispatch, recurrent scan).  Carries per-input label metadata and
-    ``shardable`` / ``comm`` declarations so EinDecomp can still reason
-    about it; register its implementation with ``register_opaque``.
+    dispatch, recurrent scan).
+
+    For a kind registered through :func:`defop` (``ein.defop`` /
+    ``@ein.op``), everything is inferred from the OpDef's label signature:
+    output labels and shape, dtype, and the ``shardable`` set — all renamed
+    into the caller's instance labels (pass ``in_labels`` to rename, e.g.
+    flash attention's ring label ``l`` becomes ``s`` in prefill and ``t``
+    in decode; omit it to use the signature's labels verbatim).  Label
+    bounds are cross-validated against every argument at build time, and
+    any explicitly-passed ``out_labels``/``out_shape`` is checked against
+    the inference instead of trusted.  The comm declaration and shard rule
+    live on the OpDef and are resolved at plan time — they are no longer
+    embedded per call.
+
+    Unregistered kinds fall back to the historical fully-explicit form
+    (``out_labels`` + ``out_shape`` required).
     """
-    out_labels = _as_labels(out_labels)
+    from repro.core import opdef as _opdef
+
     args = tuple(args)
+    od = _opdef.get(kind)
+    if od is not None and od.signature is not None:
+        bound = _opdef.bind_call(
+            od, [a.shape for a in args], in_labels=in_labels,
+            out_labels=_as_labels(out_labels) if out_labels is not None
+            else None, params=params)
+        if out_shape is not None and tuple(int(s) for s in out_shape) != \
+                bound["out_shape"]:
+            raise _opdef.OpDefError(
+                f"{kind}: caller-supplied out_shape "
+                f"{tuple(int(s) for s in out_shape)} contradicts the "
+                f"signature-inferred {bound['out_shape']}")
+        out_labels = bound["out_labels"]
+        out_shape = bound["out_shape"]
+        in_labels = bound["in_labels"]
+        if shardable is None:
+            shardable = bound["shardable"]
+        if dtype is None and od.out_dtype is not None:
+            dtype = od.out_dtype
+    elif out_labels is None or out_shape is None:
+        raise ValueError(
+            f"opaque({kind!r}): kind is not registered (or has no "
+            "signature) — pass out_labels and out_shape explicitly, or "
+            f"declare the op once with ein.defop({kind!r}, '<signature>', "
+            "fn=...)")
+    out_labels = _as_labels(out_labels)
     dtype = dtype if dtype is not None else args[0].dtype
     return Expr("opaque", out_labels, tuple(int(s) for s in out_shape), dtype,
                 name=name, args=args, op=kind, params=params,
@@ -232,12 +275,48 @@ def map_(fn: str, x: Expr, *, name: str = "", **params) -> Expr:
     return x.map(fn, name=name, **params)
 
 
-def register_opaque(name: str, fn) -> None:
-    """Register the executable implementation of an opaque op kind (shared
-    with the engine and the dense oracle — must be backend-polymorphic)."""
-    from repro.core import engine
+def defop(kind: str, signature: str | None = None, **kw):
+    """Declare one op kind as a single record — signature, dense impl,
+    kernel dispatcher, VJP rule, comm declaration, shard rule (the unified
+    ``core.opdef.defop``; see its docstring for every field)::
 
-    engine.register_opaque(name, fn)
+        ein.defop("my_fused", "b s f, f -> b s f",
+                  fn=my_dense_impl, vjp="auto",
+                  shardable="b s", shard_rule="local")
+
+    After this single declaration, ``ein.opaque("my_fused", [x, g])``
+    infers shapes/labels, ``Program.grad`` differentiates through it, the
+    DP prices its declared comm, and the shard_map executor lowers it via
+    its bound rule — no edits anywhere else.
+    """
+    from repro.core import opdef as _opdef
+
+    return _opdef.defop(kind, signature, **kw)
+
+
+def op(kind: str, signature: str | None = None, **kw):
+    """Decorator sugar for :func:`defop`: the decorated function becomes
+    the op's dense reference implementation::
+
+        @ein.op("l2norm", "b s f -> b s f", shardable="b s",
+                shard_rule="local", vjp="auto")
+        def l2norm(x, eps=1e-6):
+            ...
+    """
+
+    def wrap(fn):
+        defop(kind, signature, fn=fn, **kw)
+        return fn
+
+    return wrap
+
+
+def register_opaque(name: str, fn) -> None:
+    """Deprecated: use :func:`defop` — one declarative record (signature,
+    impl, kernel, vjp, comm, shard rule) instead of a bare impl."""
+    from repro.core import opdef as _opdef
+
+    _opdef.register_legacy(name, fn, surface="frontend.register_opaque")
 
 
 # ---------------------------------------------------------------------------

@@ -12,10 +12,13 @@ expressions over canonical labels
 inputs and a named ``logits`` output; ``Program.compile`` runs EinDecomp
 (through the plan cache) and ``CompiledProgram.policy()`` collapses the plan
 to the ShardingPolicy the production model stack applies via GSPMD.  Fused
-ops (flash attention, MoE dispatch, recurrent scans) are opaque expressions
-carrying label metadata and an internal-communication declaration
-(``comm``) so the DP can price ring / all-to-all traffic (DESIGN.md §2
-adaptation 3, §4 arch-applicability).
+ops (flash attention, MoE dispatch, recurrent scans) are opaque
+expressions whose whole declaration — label signature, shardable set, the
+internal-communication (``comm``) template the DP prices as ring /
+all-to-all traffic, the bound shard rule — lives on their registered
+OpDef (core/opdefs_builtin.py); the builders below only pass arguments
+and, where a signature label is renamed per instance, ``in_labels``
+(DESIGN.md §2 adaptation 3, §4 arch-applicability).
 
 ``build_graph`` / ``plan_for`` remain as thin shims over the Program
 surface for callers written against the original imperative API.
@@ -40,8 +43,12 @@ def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
                      decode: bool = False, kv_len: int = 0) -> ein.Expr:
     """q/k/v are declared in the kernel's (batch, heads, seq, head_dim)
     layout, so the opaque node's sequence label *is* the kernel's sequence
-    axis — what the ring shard rule rotates K/V blocks over — and its comm
-    declaration names the rule that realizes it (``rule: ring``)."""
+    axis — what the ring shard rule rotates K/V blocks over.  Everything
+    else (output shape/labels, shardable set, the ring comm declaration the
+    DP prices, the bound shard rule) comes from the ``flash_attention``
+    OpDef; the per-call ``in_labels`` only rename its ring label ``l`` to
+    this instance's label — ``s`` in prefill (shared with q), the
+    kv-cache-time ``t`` in decode."""
     H, K, hd, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model
     wq = ein.tensor("wq", "a h d", (D, H, hd))
     q = ein.einsum("b s a, a h d -> b h s d", x, wq, name="q_proj")
@@ -49,12 +56,9 @@ def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
         kc = ein.tensor("k_cache", "b k t d", (B, K, kv_len, hd))
         vc = ein.tensor("v_cache", "b k t d", (B, K, kv_len, hd))
         att = ein.opaque(
-            "flash_attention", [q, kc, vc], "b h s d", (B, H, S, hd),
+            "flash_attention", [q, kc, vc],
             in_labels=[("b", "h", "s", "d"), ("b", "k", "t", "d"),
                        ("b", "k", "t", "d")],
-            shardable={"b", "h", "k", "t"},
-            comm=[{"kind": "ring", "label": "t", "input": 1, "rule": "ring"},
-                  {"kind": "ring", "label": "t", "input": 2, "rule": "ring"}],
             name="attn")
     else:
         wk = ein.tensor("wk", "a k d", (D, K, hd))
@@ -62,12 +66,9 @@ def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
         kk = ein.einsum("b s a, a k d -> b k s d", x, wk, name="k_proj")
         vv = ein.einsum("b s a, a k d -> b k s d", x, wv, name="v_proj")
         att = ein.opaque(
-            "flash_attention", [q, kk, vv], "b h s d", (B, H, S, hd),
+            "flash_attention", [q, kk, vv],
             in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
                        ("b", "k", "s", "d")],
-            shardable={"b", "h", "k", "s"},
-            comm=[{"kind": "ring", "label": "s", "input": 1, "rule": "ring"},
-                  {"kind": "ring", "label": "s", "input": 2, "rule": "ring"}],
             name="attn")
     wo = ein.tensor("wo", "h d a", (H, hd, D))
     return ein.einsum("b h s d, h d a -> b s a", att, wo, name="o_proj")
@@ -95,13 +96,10 @@ def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
     C = max(128, -(-int(T * cfg.top_k / E * cfg.capacity_factor) // 128) * 128)
     wr = ein.tensor("router_w", "a e", (D, E))
     route = ein.einsum("b s a, a e -> b s e", x, wr, name="router")
-    disp = ein.opaque(
-        "moe_dispatch", [x, route], "e c a", (E, C, D),
-        in_labels=[("b", "s", "a"), ("b", "s", "e")],
-        shardable={"e", "c", "b", "s"},
-        comm=[{"kind": "a2a", "label": "e", "input": 0, "rule": "a2a"},
-              {"kind": "a2a", "label": "c", "input": 0, "rule": "a2a"}],
-        name="dispatch")
+    # the capacity param binds the output-only label c (OpDef param_bounds);
+    # shardable set + a2a comm declaration + shard rule come from the OpDef
+    disp = ein.opaque("moe_dispatch", [x, route], name="dispatch",
+                      capacity=C)
     we1 = ein.tensor("we1", "e a f", (E, D, F))
     h = ein.einsum("e c a, e a f -> e c f", disp, we1, name="expert_up")
     h = h.map(cfg.act if cfg.act in ("silu", "gelu", "relu2") else "silu")
@@ -112,16 +110,7 @@ def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
                        name="expert_mul")
     we2 = ein.tensor("we2", "e f a", (E, F, D))
     y = ein.einsum("e c f, e f a -> e c a", h, we2, name="expert_down")
-    comb = ein.opaque(
-        "moe_combine", [y, route], "b s a", (B, S, D),
-        in_labels=[("e", "c", "a"), ("b", "s", "e")],
-        shardable={"b", "s", "e", "c"},
-        # the moved buffer is the token-sided *output* (input -1): combine
-        # returns each token its expert's result, it never moves the full
-        # (e, c, a) expert buffer
-        comm=[{"kind": "a2a", "label": "e", "input": -1, "rule": "a2a"},
-              {"kind": "a2a", "label": "c", "input": -1, "rule": "a2a"}],
-        name="combine")
+    comb = ein.opaque("moe_combine", [y, route], name="combine")
     if cfg.shared_expert_ff:
         sh = _ffn_nodes(x, cfg, B, S, d_ff=cfg.shared_expert_ff)
         comb = ein.einsum("b s a, b s a -> b s a", comb, sh, combine="add",
@@ -132,20 +121,19 @@ def _moe_nodes(x: ein.Expr, cfg, B: int, S: int) -> ein.Expr:
 def _recurrent_nodes(x: ein.Expr, cfg, B: int, S: int, kind: str) -> ein.Expr:
     """mLSTM / sLSTM / SSM path as proj -> opaque scan -> proj.
 
-    The scan's sequence label is non-partitionable (shardable excludes s) —
-    the brief's arch-applicability caveat for recurrence.  mLSTM/SSM channel
-    labels stay shardable (chunkwise forms are channel-local); sLSTM's dense
-    recurrent matrix couples the whole width, so only b shards.
+    The scan's sequence label is non-partitionable (the scan OpDefs'
+    shardable sets exclude s) — the brief's arch-applicability caveat for
+    recurrence.  mLSTM/SSM channel labels stay shardable (chunkwise forms
+    are channel-local) and the OpDefs bind the ``local`` shard rule, so the
+    shard_map executor runs a local scan per channel shard with zero
+    collectives; sLSTM's dense recurrent matrix couples the whole width,
+    so only b shards.
     """
     D = cfg.d_model
     F = 2 * D
     win = ein.tensor(f"{kind}_in", "a f", (D, F))
     h = ein.einsum("b s a, a f -> b s f", x, win, name=f"{kind}_up")
-    shardable = {"b"} if kind == "slstm" else {"b", "f"}
-    scan = ein.opaque(
-        f"{kind}_scan", [h], "b s f", (B, S, F),
-        in_labels=[("b", "s", "f")], shardable=shardable,
-        name=f"{kind}_scan")
+    scan = ein.opaque(f"{kind}_scan", [h], name=f"{kind}_scan")
     wdn = ein.tensor(f"{kind}_down", "f a", (F, D))
     return ein.einsum("b s f, f a -> b s a", scan, wdn, name=f"{kind}_down_proj")
 
@@ -170,9 +158,7 @@ def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
 
     ids = ein.tensor("ids", "b s", (B, S), dtype="int32")
     table = ein.tensor("embed", "v a", (V, D))
-    x = ein.opaque("gather_rows", [table, ids], "b s a", (B, S, D),
-                   in_labels=[("v", "a"), ("b", "s")],
-                   shardable={"b", "s", "a"}, name="embed_lookup")
+    x = ein.opaque("gather_rows", [table, ids], name="embed_lookup")
 
     for blk in cfg.block_pattern:
         if blk == "attn":

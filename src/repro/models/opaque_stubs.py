@@ -1,5 +1,7 @@
-"""Deterministic, shape-correct stand-ins for opaque kinds that have no
-production engine implementation (MoE dispatch/combine, recurrent scans).
+"""Deterministic, shape-correct stand-ins for opaque kinds that are
+*declared* (core/opdefs_builtin.py: signature, comm, shard rule) but ship
+no production engine implementation (MoE dispatch/combine, recurrent
+scans).
 
 Shared by the executor-equivalence tests and ``benchmarks/bench_spmd.py``:
 those suites pin that two execution paths realize the *same dataflow*, not
@@ -14,6 +16,11 @@ Dispatch places each kept token's raw activation at its global ``(expert,
 slot)``; combine gathers it back gate-weighted (dropped tokens contribute
 0).  That shared routing is what makes the dense replicated path and the
 sharded a2a path agree to fp tolerance.
+
+``make_stub_opaques`` registers through the unified OpDef path
+(``opdef.provide_impl``), which cross-validates each impl's output shape
+against the declared signature at registration time; the returned dict
+additionally supports the historical ``monkeypatch.setitem`` idiom.
 """
 from __future__ import annotations
 
@@ -30,17 +37,24 @@ def capacity_of(g) -> int:
     return disp[0].shape[1] if disp else 0
 
 
-def make_stub_opaques(capacity: int = 0) -> dict[str, Callable]:
-    """{opaque kind: deterministic stand-in} for one graph (``capacity``
-    from ``capacity_of``).  Register via ``engine.register_opaque`` or
-    ``monkeypatch.setitem(engine.OPAQUE_FNS, ...)``."""
+def make_stub_opaques(capacity: int = 0, *,
+                      register: bool = True) -> dict[str, Callable]:
+    """{opaque kind: deterministic stand-in} (``capacity`` from
+    ``capacity_of`` is the default when a dispatch node carries no
+    ``capacity`` param of its own — OpDef-built graphs always do).
+
+    With ``register`` (default) the impls are attached to their declared
+    OpDefs via ``opdef.provide_impl`` — signature-checked, visible to every
+    execution surface at once.  The returned dict remains usable with the
+    historical monkeypatch-an-impl test idiom.
+    """
 
     def cumnorm(h):
         h = jnp.asarray(h)
         t = jnp.arange(1, h.shape[1] + 1, dtype=h.dtype)[None, :, None]
         return jnp.cumsum(h, axis=1) / t
 
-    def dispatch(x, route):
+    def dispatch(x, route, capacity=capacity):
         x = jnp.asarray(x)
         b, s, d = x.shape
         n_e = route.shape[-1]
@@ -62,5 +76,11 @@ def make_stub_opaques(capacity: int = 0) -> dict[str, Callable]:
         vals = vals * (gate * keep).astype(y.dtype)[:, None]
         return jnp.swapaxes(vals.reshape(s, b, d), 0, 1)
 
-    return {"ssm_scan": cumnorm, "mlstm_scan": cumnorm, "slstm_scan": cumnorm,
-            "moe_dispatch": dispatch, "moe_combine": combine}
+    fns = {"ssm_scan": cumnorm, "mlstm_scan": cumnorm, "slstm_scan": cumnorm,
+           "moe_dispatch": dispatch, "moe_combine": combine}
+    if register:
+        from repro.core import opdef
+
+        for kind, fn in fns.items():
+            opdef.provide_impl(kind, fn)
+    return fns

@@ -1,0 +1,665 @@
+"""The unified OpDef API (core/opdef.py + ein.defop / @ein.op).
+
+Five layers of coverage:
+
+1. **Registration-time cross-validation**: duplicate kinds, dense-impl
+   output shapes that contradict the signature, comm declarations
+   referencing unregistered shard rules / unknown kinds / unknown labels,
+   shard-rule conflicts, unbound output labels.
+
+2. **Call-site inference**: ``ein.opaque`` infers out labels/shape/
+   shardable from the signature (no caller-supplied ``out_shape``),
+   validates label bounds across arguments, honors per-call instance
+   renaming (flash attention's ring label ``l`` → ``s``/``t``), and
+   rejects contradictions instead of trusting the caller.
+
+3. **Single-registry equivalence**: OpDef-declared graphs plan
+   bit-identically to the historical fully-explicit declarations (comm
+   params on the node), and the legacy surfaces (``register_opaque``,
+   ``engine.OPAQUE_FNS`` item assignment) still work as deprecation shims
+   / live views over the one registry.
+
+4. **Autodiff through opaques**: ``Program.grad`` works through ops with a
+   VJP (auto ``jax.vjp`` of the impl — flash attention included) and
+   raises an actionable error naming the op otherwise.
+
+5. **End-to-end custom op, entirely outside core/**: one ``@ein.op``
+   declaration (signature, dense impl, VJP, comm declaration, custom shard
+   rule) runs through the dense, grad, and shard_map executor paths.
+
+Plus the channel-parallel ``local`` scan rule (ROADMAP item): zero
+collectives when only channel labels are sharded, replicate fallback when
+its preconditions fail.
+"""
+import math
+import re
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import frontend as ein
+from repro.core import engine, opaque_rules, opdef, spmd
+from repro.core.decomp import Plan, eindecomp, opaque_node_bound, plan_cost
+from repro.core.einsum import EinGraph, eval_graph_dense
+from repro.launch.mesh import make_host_mesh
+from repro.models.opaque_stubs import make_stub_opaques
+
+RNG = np.random.default_rng(0)
+N_DEV = len(jax.devices())
+
+
+@pytest.fixture
+def defop_tmp():
+    """defop wrapper that unregisters everything it created on teardown."""
+    created = []
+
+    def reg(kind, *a, **kw):
+        od = opdef.defop(kind, *a, **kw)
+        created.append(kind)
+        return od
+
+    yield reg
+    for kind in created:
+        opdef.unregister(kind)
+
+
+# ---------------------------------------------------------------------------
+# 1. registration-time cross-validation
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_kind_rejected(defop_tmp):
+    defop_tmp("t_dup", "b a -> b a", fn=lambda x: jnp.asarray(x))
+    with pytest.raises(opdef.OpDefError, match="already registered"):
+        opdef.defop("t_dup", "b a -> b a", fn=lambda x: jnp.asarray(x))
+    # explicit overwrite is allowed
+    opdef.defop("t_dup", "b a -> b a", fn=lambda x: jnp.asarray(x),
+                overwrite=True)
+
+
+def test_impl_output_shape_mismatch_rejected():
+    with pytest.raises(opdef.OpDefError, match="does not match the signature"):
+        opdef.defop("t_badshape", "b a -> b a",
+                    fn=lambda x: jnp.sum(jnp.asarray(x), axis=-1))
+    assert opdef.get("t_badshape") is None  # nothing half-registered
+
+
+def test_provide_impl_checks_against_signature(defop_tmp):
+    defop_tmp("t_late", "b a -> b a")
+    with pytest.raises(opdef.OpDefError, match="does not match the signature"):
+        opdef.provide_impl("t_late", lambda x: jnp.asarray(x)[0])
+    assert opdef.get("t_late").fn is None  # failed impl not kept
+    opdef.provide_impl("t_late", lambda x: jnp.asarray(x) * 2)
+    assert engine.OPAQUE_FNS["t_late"] is not None
+
+
+def test_comm_unregistered_shard_rule_rejected():
+    with pytest.raises(opdef.OpDefError, match="warp-drive"):
+        opdef.defop("t_badrule", "b s -> b s", fn=lambda x: jnp.asarray(x),
+                    comm=[{"kind": "ring", "label": "s", "input": 0,
+                           "rule": "warp-drive"}])
+    with pytest.raises(opdef.OpDefError, match="warp-drive"):
+        opdef.defop("t_badrule2", "b s -> b s", shard_rule="warp-drive")
+
+
+def test_comm_unknown_kind_label_input_rejected():
+    with pytest.raises(opdef.OpDefError, match="broadcast"):
+        opdef.defop("t_badkind", "b s -> b s",
+                    comm=[{"kind": "broadcast", "label": "s", "input": 0}])
+    with pytest.raises(opdef.OpDefError, match="absent from the signature"):
+        opdef.defop("t_badlabel", "b s -> b s",
+                    comm=[{"kind": "ring", "label": "z", "input": 0}])
+    with pytest.raises(opdef.OpDefError, match="out of range"):
+        opdef.defop("t_badinput", "b s -> b s",
+                    comm=[{"kind": "ring", "label": "s", "input": 3}])
+
+
+def test_conflicting_rules_rejected():
+    with pytest.raises(opdef.OpDefError, match="conflicting"):
+        opdef.defop("t_conflict", "b s, b s -> b s",
+                    comm=[{"kind": "ring", "label": "s", "input": 0},
+                          {"kind": "a2a", "label": "b", "input": 1}])
+    with pytest.raises(opdef.OpDefError, match="disagrees"):
+        opdef.defop("t_conflict2", "b s -> b s", shard_rule="replicate",
+                    comm=[{"kind": "ring", "label": "s", "input": 0}])
+
+
+def test_unbound_output_label_rejected():
+    with pytest.raises(opdef.OpDefError, match="appears in no input"):
+        opdef.defop("t_unbound", "b a -> b c")
+    # ...unless bound by a call param (the MoE capacity pattern)
+    od = opdef.defop("t_bound", "b a -> b c", param_bounds={"c": "cap"})
+    try:
+        assert od.param_bounds == {"c": "cap"}
+    finally:
+        opdef.unregister("t_bound")
+
+
+def test_shardable_must_be_signature_labels():
+    with pytest.raises(opdef.OpDefError, match="shardable"):
+        opdef.defop("t_badshard", "b a -> b a", shardable="b z")
+
+
+def test_comm_entry_missing_input_key_rejected():
+    with pytest.raises(opdef.OpDefError, match="missing or out of range"):
+        opdef.defop("t_noinput", "a b, b c -> a c", shard_rule="ring",
+                    comm=[{"kind": "ring", "label": "b"}])
+
+
+def test_grad_link_must_name_a_registered_map(defop_tmp):
+    with pytest.raises(opdef.OpDefError, match="relu_gard"):
+        opdef.defop("t_typo_grad", None, fn=lambda x: jnp.asarray(x),
+                    category="map", grad="relu_gard")
+    # self-derivative (exp-style) and registered targets are fine
+    defop_tmp("t_selfgrad", None, fn=lambda x: jnp.asarray(x),
+              category="map", grad="t_selfgrad")
+    defop_tmp("t_linked", None, fn=lambda x: jnp.asarray(x),
+              category="map", grad="one")
+
+
+# ---------------------------------------------------------------------------
+# 2. call-site inference
+# ---------------------------------------------------------------------------
+
+
+def test_opaque_infers_shape_dtype_shardable(defop_tmp):
+    defop_tmp("t_scaleadd", "b s f, f -> b s f", shardable="b f",
+              fn=lambda x, g: jnp.asarray(x) + jnp.asarray(g))
+    x = ein.tensor("x", "b s f", (2, 8, 4))
+    g = ein.tensor("g", "f", (4,))
+    y = ein.opaque("t_scaleadd", [x, g])
+    assert y.labels == ("b", "s", "f")
+    assert y.shape == (2, 8, 4)
+    assert y.shardable == frozenset({"b", "f"})
+    # a caller-supplied out_shape is cross-checked, not trusted
+    with pytest.raises(opdef.OpDefError, match="contradicts"):
+        ein.opaque("t_scaleadd", [x, g], "b s f", (2, 8, 5))
+    # inconsistent label bounds across arguments are a build-time error
+    g_bad = ein.tensor("g_bad", "f", (5,))
+    with pytest.raises(opdef.OpDefError, match="bound mismatch"):
+        ein.opaque("t_scaleadd", [x, g_bad])
+
+
+def test_opaque_instance_renaming_flash_attention():
+    """Decode-style renaming: the signature's ring label l becomes the
+    kv-cache-time t; the shardable set follows the renaming (q-seq s stays
+    non-shardable in decode because only l is declared shardable)."""
+    q = ein.tensor("q", "b h s d", (2, 4, 1, 8))
+    k = ein.tensor("k", "b k t d", (2, 2, 16, 8))
+    v = ein.tensor("v", "b k t d", (2, 2, 16, 8))
+    att = ein.opaque("flash_attention", [q, k, v],
+                     in_labels=[("b", "h", "s", "d"), ("b", "k", "t", "d"),
+                                ("b", "k", "t", "d")])
+    assert att.labels == ("b", "h", "s", "d")
+    assert att.shape == (2, 4, 1, 8)
+    assert att.shardable == frozenset({"b", "h", "k", "t"})
+
+
+def test_opaque_param_bound_label(defop_tmp):
+    defop_tmp("t_cap", "b a -> b c", param_bounds={"c": "cap"})
+    x = ein.tensor("xc", "b a", (2, 8))
+    y = ein.opaque("t_cap", [x], cap=5)
+    assert y.shape == (2, 5)
+    with pytest.raises(opdef.OpDefError, match="cap"):
+        ein.opaque("t_cap", [x])  # param not passed
+    with pytest.raises(opdef.OpDefError, match="out_labels"):
+        ein.opaque("t_cap", [x], "e", cap=5)  # wrong output arity
+
+
+def test_unregistered_kind_requires_explicit_metadata():
+    x = ein.tensor("xu", "b a", (2, 8))
+    with pytest.raises(ValueError, match="defop"):
+        ein.opaque("t_never_registered", [x])
+    # the historical fully-explicit form still works
+    y = ein.opaque("t_never_registered", [x], "b a", (2, 8),
+                   in_labels=[("b", "a")])
+    assert y.shape == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# 3. single-registry equivalence + legacy shims
+# ---------------------------------------------------------------------------
+
+B, H, K, S, D = 2, 4, 2, 32, 16
+
+
+def _attn_graph_explicit():
+    """PR-4-style fully-explicit declaration (comm params on the node)."""
+    g = EinGraph("explicit")
+    q = g.input("q", "b h s d", (B, H, S, D))
+    k = g.input("k", "b k s d", (B, K, S, D))
+    v = g.input("v", "b k s d", (B, K, S, D))
+    g.opaque("flash_attention", [q, k, v], "b h s d", (B, H, S, D),
+             in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                        ("b", "k", "s", "d")],
+             shardable={"b", "h", "k", "s"},
+             comm=[{"kind": "ring", "label": "s", "input": 1,
+                    "rule": "ring"},
+                   {"kind": "ring", "label": "s", "input": 2,
+                    "rule": "ring"}])
+    return g
+
+
+def _attn_graph_opdef():
+    """The same attention, everything resolved from the OpDef."""
+    q = ein.tensor("q", "b h s d", (B, H, S, D))
+    k = ein.tensor("k", "b k s d", (B, K, S, D))
+    v = ein.tensor("v", "b k s d", (B, K, S, D))
+    att = ein.opaque("flash_attention", [q, k, v],
+                     in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                                ("b", "k", "s", "d")])
+    g, _ = ein.trace([att])
+    return g
+
+
+def test_opdef_comm_prices_identically_to_explicit_params():
+    """The DP over an OpDef-declared graph is bit-identical (plan + cost)
+    to the historical explicit comm-param declaration."""
+    g_old, g_new = _attn_graph_explicit(), _attn_graph_opdef()
+    for mesh_axes in ({"data": 2, "model": 4}, {"data": 4, "model": 2}):
+        p_old = eindecomp(g_old, 8, mesh_axes=mesh_axes)
+        p_new = eindecomp(g_new, 8, mesh_axes=mesh_axes)
+        assert p_old.cost == p_new.cost
+        assert p_old.d_by_node == p_new.d_by_node
+        assert p_old.axes_by_node == p_new.axes_by_node
+        assert plan_cost(g_old, p_old) == plan_cost(g_new, p_new)
+
+
+def test_explicit_comm_param_overrides_opdef():
+    """A per-node comm=[] still silences the OpDef template (the historical
+    per-call override)."""
+    g = EinGraph()
+    q = g.input("q", "b h s d", (B, H, S, D))
+    k = g.input("k", "b k s d", (B, K, S, D))
+    v = g.input("v", "b k s d", (B, K, S, D))
+    o = g.opaque("flash_attention", [q, k, v], "b h s d", (B, H, S, D),
+                 in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                            ("b", "k", "s", "d")],
+                 shardable={"b", "h", "k", "s"}, comm=[])
+    assert opdef.comm_for_node(g.nodes[o]) == []
+    assert opaque_rules.resolve_rule_name(g.nodes[o]) == "ring"  # shard_rule
+
+
+def test_register_opaque_shims_are_deprecated_but_work():
+    for surface in (engine.register_opaque, ein.register_opaque):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            surface("t_legacy", lambda x: jnp.asarray(x) * 3)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+        assert "defop" in str(w[0].message)
+        assert np.asarray(engine.OPAQUE_FNS["t_legacy"](np.ones(2)))[0] == 3
+        del engine.OPAQUE_FNS["t_legacy"]
+        assert "t_legacy" not in engine.OPAQUE_FNS
+
+
+def test_impl_view_override_roundtrip():
+    """monkeypatch.setitem semantics over the view: an override wins over
+    the registered kernel/impl and deletion restores the original."""
+    orig = engine.OPAQUE_FNS["flash_attention"]
+    engine.OPAQUE_FNS["flash_attention"] = lambda *a, **k: "stub"
+    assert engine.OPAQUE_FNS["flash_attention"](None) == "stub"
+    del engine.OPAQUE_FNS["flash_attention"]
+    assert engine.OPAQUE_FNS["flash_attention"] is orig
+    assert opdef.get("flash_attention") is not None  # record survives
+
+
+def test_builtin_impls_match_their_signatures():
+    """The built-in catalog registers with check_impl=False (running an
+    impl would initialize the jax backend inside the pure-planning path);
+    this sweep runs the signature-vs-impl cross-validation for every
+    builtin instead — including the stub-provided MoE/scan impls."""
+    make_stub_opaques()
+    for kind in opdef.list_ops():
+        opdef.check_impl(kind)
+
+
+def test_planning_never_initializes_the_jax_backend():
+    """Loading the op catalog from the planner (comm pricing, rule
+    validation) must not execute any impl: a DP run on a fresh registry
+    performs zero jax array operations (the musicgen-subprocess hang
+    regression — backend init probes TPU metadata and can stall for
+    minutes in constrained environments)."""
+    import subprocess
+    import sys
+
+    snippet = (
+        "import sys\n"
+        "from repro.models.eingraphs import build_graph\n"
+        "from repro.configs import get_config, reduced, SHAPES\n"
+        "from repro.core.decomp import eindecomp\n"
+        "g = build_graph(reduced(get_config('mixtral-8x7b')),"
+        " SHAPES['train_4k'])\n"
+        "plan = eindecomp(g, 8, mesh_axes={'data': 2, 'model': 4})\n"
+        "assert plan.cost > 0\n"
+        "import jax\n"
+        "assert not jax._src.xla_bridge._backends, 'backend initialized'\n")
+    proc = subprocess.run(
+        [sys.executable, "-c", snippet], capture_output=True, text=True,
+        env={"PYTHONPATH": "src"}, timeout=120,
+        cwd=str(Path(__file__).resolve().parent.parent))
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_no_private_registry_use_outside_core():
+    """The lightweight grep ban (mirrors the ruff TID251 config): no module
+    outside core/ touches the private registries directly — everything
+    goes through the OpDef API."""
+    src = Path(__file__).resolve().parent.parent / "src" / "repro"
+    banned = re.compile(
+        r"OPAQUE_FNS|MAP_FNS|GRAD_MAPS|opaque_rules\.RULES|RULES\[")
+    offenders = []
+    for path in src.rglob("*.py"):
+        if (src / "core") in path.parents:
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if banned.search(line):
+                offenders.append(f"{path.relative_to(src)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "private registry use outside core/ (use ein.defop / "
+        "opdef.provide_impl):\n" + "\n".join(offenders))
+
+
+# ---------------------------------------------------------------------------
+# 4. autodiff through opaques
+# ---------------------------------------------------------------------------
+
+
+def test_grad_without_vjp_names_the_op(defop_tmp):
+    defop_tmp("t_novjp", "b s -> b s", fn=lambda x: jnp.asarray(x) * 2)
+    x = ein.tensor("x", "b s", (2, 4))
+    y = ein.opaque("t_novjp", [x])
+    loss = ein.einsum("b s ->", y, combine="id", agg="sum")
+    prog = ein.Program({"loss": loss})
+    with pytest.raises(NotImplementedError, match="t_novjp.*vjp"):
+        prog.grad("x")
+
+
+def test_auto_vjp_matches_jax_grad(defop_tmp):
+    defop_tmp("t_sq", "b s -> b s", vjp="auto",
+              fn=lambda x: jnp.square(jnp.asarray(x)) * 0.5)
+    x = ein.tensor("x", "b s", (3, 5))
+    y = ein.opaque("t_sq", [x])
+    loss = ein.einsum("b s ->", y, combine="id", agg="sum")
+    run = ein.Program({"loss": loss}).grad("x").compile()
+    X = RNG.normal(size=(3, 5)).astype(np.float32)
+    got = run({"x": X})["grad_x"]
+    np.testing.assert_allclose(np.asarray(got), X, rtol=1e-5, atol=1e-6)
+
+
+def test_impl_view_rejects_cross_category_override():
+    """Op kinds share one namespace: an opaque-view write over a registered
+    *map* op would silently replace its execution everywhere (the old
+    split dicts kept such writes inert), so it must be rejected."""
+    with pytest.raises(opdef.OpDefError, match="registered as a map op"):
+        engine.OPAQUE_FNS["relu"] = lambda x: x
+    assert opdef.get("relu").impl_override is None
+
+
+def test_auto_vjp_differentiates_the_dense_reference(defop_tmp):
+    """The auto VJP must pull back through the dense reference impl, not
+    the kernel dispatcher (which may route to a pallas_call with no AD
+    rule on TPU) and not a test override."""
+    defop_tmp("t_kerngrad", "b s -> b s", vjp="auto",
+              fn=lambda x: jnp.square(jnp.asarray(x)),
+              kernel=lambda x: jax.lax.stop_gradient(
+                  jnp.square(jnp.asarray(x))))
+    x = ein.tensor("x", "b s", (2, 4))
+    loss = ein.einsum("b s ->", ein.opaque("t_kerngrad", [x]),
+                      combine="id", agg="sum")
+    run = ein.Program({"loss": loss}).grad("x").compile()
+    X = RNG.normal(size=(2, 4)).astype(np.float32)
+    # the kernel's stop_gradient would zero this; the reference gives 2x
+    np.testing.assert_allclose(np.asarray(run({"x": X})["grad_x"]), 2 * X,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_grad_through_flash_attention():
+    """Program.grad through the builtin flash-attention opaque (auto VJP):
+    matches jax.grad of the dense composition for every q/k/v input."""
+    b, h, s, d = 2, 2, 8, 4
+    q = ein.tensor("q", "b h s d", (b, h, s, d))
+    k = ein.tensor("k", "b k s d", (b, h, s, d))
+    v = ein.tensor("v", "b k s d", (b, h, s, d))
+    att = ein.opaque("flash_attention", [q, k, v],
+                     in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                                ("b", "k", "s", "d")])
+    loss = ein.einsum("b h s d ->", att, combine="id", agg="sum")
+    run = ein.Program({"loss": loss}).grad(["q", "k", "v"]).compile()
+    feeds = {n: (RNG.normal(size=(b, h, s, d)) * 0.3).astype(np.float32)
+             for n in ("q", "k", "v")}
+    got = run(feeds)
+
+    from repro.kernels import ref
+
+    def dense(qq, kk, vv):
+        return jnp.sum(ref.attention(qq, kk, vv, causal=True))
+
+    want = jax.grad(dense, argnums=(0, 1, 2))(
+        feeds["q"], feeds["k"], feeds["v"])
+    for name, w in zip(("q", "k", "v"), want):
+        np.testing.assert_allclose(np.asarray(got[f"grad_{name}"]),
+                                   np.asarray(w), rtol=1e-4, atol=1e-5,
+                                   err_msg=f"grad_{name}")
+
+
+def test_grad_skips_integer_inputs():
+    """gather_rows: the table gets a scatter-add gradient, the int ids get
+    none (and asking for one is a clear error, not a silent float0)."""
+    table = ein.tensor("table", "v a", (8, 4))
+    ids = ein.tensor("ids", "b s", (2, 3), dtype="int32")
+    emb = ein.opaque("gather_rows", [table, ids])
+    loss = ein.einsum("b s a ->", emb, combine="id", agg="sum")
+    prog = ein.Program({"loss": loss})
+    run = prog.grad("table").compile()
+    T = RNG.normal(size=(8, 4)).astype(np.float32)
+    ids_v = np.array([[1, 2, 1], [0, 7, 1]], np.int32)
+    got = np.asarray(run({"table": T, "ids": ids_v})["grad_table"])
+    want = np.zeros_like(T)
+    np.add.at(want, ids_v.reshape(-1), 1.0)
+    np.testing.assert_allclose(got, want)
+    with pytest.raises(ValueError, match="no gradient path"):
+        prog.grad("ids")
+
+
+# ---------------------------------------------------------------------------
+# 5. the channel-parallel `local` scan rule (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+def _scan_graph(f=16):
+    g = EinGraph("scan")
+    h = g.input("h", "b s f", (4, 8, f))
+    o = g.opaque("mlstm_scan", [h], "b s f", (4, 8, f),
+                 in_labels=[("b", "s", "f")], shardable={"b", "f"})
+    return g, o
+
+
+def _uniform_plan(g, axes_cfg, sizes, p=8):
+    """Every non-input node gets the same label->axes map (with the d
+    vector the axes imply, so comm pricing sees the real shard counts);
+    graph inputs stay replicated."""
+    plan = Plan(p=p, mode="mesh")
+    for n in g.nodes:
+        if n.kind == "input":
+            plan.d_by_node[n.nid] = {l: 1 for l in n.labels}
+            plan.axes_by_node[n.nid] = {}
+        else:
+            plan.d_by_node[n.nid] = {
+                l: math.prod(sizes[a] for a in axes_cfg.get(l, ()))
+                for l in n.labels}
+            plan.axes_by_node[n.nid] = dict(axes_cfg)
+    return plan
+
+
+def test_scan_local_rule_zero_collectives():
+    """Channel-only sharding runs the scan fully locally — zero wire
+    elements, where the replicate fallback gathered the full state."""
+    g, o = _scan_graph()
+    sizes = {"data": 2, "model": 4}
+    plan = _uniform_plan(g, {"b": ("data",), "f": ("model",)}, sizes)
+    sched = spmd.build_schedule(g, plan, sizes, [o])
+    assert sched.trace.rule_by_node[o] == "local"
+    assert len(sched.trace) == 0, sched.trace.summary()
+    assert sched.layouts[o] == (("data",), (), ("model",))
+
+
+def test_scan_local_rule_falls_back_on_indivisible_channel():
+    g, o = _scan_graph(f=12)  # 12 % 8 != 0 under f=(data, model)
+    sizes = {"data": 2, "model": 4}
+    plan = _uniform_plan(g, {"f": ("data", "model")}, sizes)
+    sched = spmd.build_schedule(g, plan, sizes, [o])
+    assert sched.trace.rule_by_node[o] == "replicate"
+
+
+def test_scan_local_execution_matches_dense():
+    make_stub_opaques()
+    g, o = _scan_graph()
+    mesh = make_host_mesh((2, 4))
+    sizes = engine.mesh_axes_dict(mesh)
+    plan = _uniform_plan(g, {"b": ("data",), "f": ("model",)}, sizes,
+                         p=math.prod(sizes.values()))
+    fn = jax.jit(engine.make_runner(g, [o], plan=plan, mesh=mesh,
+                                    executor="shard_map"))
+    feeds = {0: (RNG.normal(size=(4, 8, 16))).astype(np.float32)}
+    got = np.asarray(fn(feeds[0]))
+    np.testing.assert_allclose(got, eval_graph_dense(g, feeds)[o],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_zoo_scans_lower_local_with_zero_wire():
+    """The DP-planned xlstm/hymba cells: every scan node lowers through the
+    local rule and moves zero wire elements (the bench_spmd --check
+    property for the scan family)."""
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.models.eingraphs import program_for
+
+    for arch in ("xlstm-125m", "hymba-1.5b"):
+        cfg = reduced(get_config(arch))
+        g = program_for(cfg, ShapeConfig("eq", "prefill", 32, 4)).graph
+        axes = {"data": 2, "model": 4}
+        plan = eindecomp(g, 8, mesh_axes=axes, offpath_repart=True)
+        sched = spmd.build_schedule(g, plan, axes)
+        scans = [n for n in g.nodes if n.op.endswith("_scan")]
+        assert scans
+        for n in scans:
+            assert sched.trace.rule_by_node[n.nid] == "local", (arch, n.name)
+            assert sched.trace.elems_by_node.get(n.nid, 0) == 0, (arch, n.name)
+
+
+# ---------------------------------------------------------------------------
+# 6. end-to-end custom op, entirely outside core/
+# ---------------------------------------------------------------------------
+
+
+class _SeqMeanRule:
+    """Custom shard rule for t_addmean: keep the plan layout, compute the
+    per-shard partial sequence sum, psum it over the sequence axes."""
+
+    name = "t_seqmean"
+
+    def lower(self, g, node, ax_n, sizes):
+        if len(node.inputs) != 1 or node.in_labels[0] != tuple(node.labels):
+            return None
+        b_l, s_l, f_l = node.labels
+        layout = tuple(spmd._norm_axes(ax_n.get(l, ()), sizes)
+                       for l in node.labels)
+        s_axes = layout[1]
+        seq_total = node.shape[1]
+        events = []
+        if s_axes:
+            n_dev = math.prod(sizes.values())
+            loc = spmd.local_shape(node.shape, layout, sizes)
+            part = loc[0] * loc[2]  # the (b_loc, 1, f_loc) partial
+            kk = math.prod(sizes[a] for a in s_axes)
+            events.append(("psum", tuple(s_axes),
+                           n_dev * 2 * (kk - 1) * part // kk,
+                           n_dev * 2 * (kk - 1) * part // kk * 4))
+
+        def run(args):
+            from jax import lax
+
+            (x,) = args
+            part = jnp.sum(x, axis=1, keepdims=True)
+            if s_axes:
+                part = lax.psum(part, tuple(s_axes))
+            return x + part / seq_total
+
+        return opaque_rules.RuleLowering(
+            arg_layouts=[layout], out_layout=layout, run=run, events=events)
+
+
+def _addmean_dense(x):
+    x = jnp.asarray(x)
+    return x + jnp.mean(x, axis=1, keepdims=True)
+
+
+@pytest.fixture
+def addmean_op():
+    """One declaration, zero core/ edits: signature, dense impl, VJP, comm
+    declaration, and a custom shard rule."""
+    opaque_rules.register_rule(_SeqMeanRule())
+
+    @ein.op("t_addmean", "b s f -> b s f", shardable="b s f", vjp="auto",
+            comm=[{"kind": "ring", "label": "s", "input": 0,
+                   "rule": "t_seqmean"}])
+    def addmean(x):
+        return _addmean_dense(x)
+
+    yield
+    opdef.unregister("t_addmean")
+    opaque_rules.RULES.pop("t_seqmean", None)
+
+
+def test_custom_op_dense_grad_and_shard_map(addmean_op):
+    b, s, f = 4, 16, 8
+    X = (RNG.normal(size=(b, s, f))).astype(np.float32)
+
+    # -- dense path ----------------------------------------------------------
+    x = ein.tensor("x", "b s f", (b, s, f))
+    y = ein.opaque("t_addmean", [x], name="addmean")  # shape inferred
+    prog = ein.Program({"y": y})
+    out = np.asarray(prog.compile()({"x": X})["y"])
+    np.testing.assert_allclose(out, np.asarray(_addmean_dense(X)),
+                               rtol=1e-6, atol=1e-6)
+
+    # -- grad path (auto VJP through the custom impl) ------------------------
+    loss = ein.einsum("b s f ->", y, combine="id", agg="sum")
+    grad_run = ein.Program({"loss": loss}).grad("x").compile()
+    got_g = np.asarray(grad_run({"x": X})["grad_x"])
+    want_g = jax.grad(lambda v: jnp.sum(_addmean_dense(v)))(jnp.asarray(X))
+    np.testing.assert_allclose(got_g, np.asarray(want_g),
+                               rtol=1e-5, atol=1e-6)
+
+    # -- shard_map executor: planned by the DP, lowered by the custom rule ---
+    mesh = make_host_mesh((2, 4))
+    run = prog.compile(mesh=mesh, executor="shard_map")
+    got = np.asarray(run({"x": X})["y"])
+    np.testing.assert_allclose(got, out, rtol=1e-5, atol=1e-6)
+    g = prog.graph
+    nid = next(n.nid for n in g.nodes if n.op == "t_addmean")
+    tr = run.collectives
+    assert tr.rule_by_node[nid] == "t_seqmean"
+    # traced movement within the node's slice of the §7 objective
+    assert tr.elems_by_node.get(nid, 0) <= \
+        opaque_node_bound(g, run.plan, nid)
+
+    # a plan that shards the sequence label exercises the rule's psum —
+    # schedule assertions are device-free (explicit 8-way mesh sizes)
+    sizes = {"data": 2, "model": 4}
+    plan8 = _uniform_plan(g, {"s": ("model",), "b": ("data",)}, sizes)
+    sched = spmd.build_schedule(g, plan8, sizes, [nid])
+    assert sched.trace.rule_by_node[nid] == "t_seqmean"
+    assert sched.trace.counts == {"psum": 1}
+    assert sched.trace.elems_by_node[nid] <= opaque_node_bound(g, plan8, nid)
+    # ...and the sharded program still computes the same values on
+    # whatever host mesh exists (8 real devices on the multi-device job)
+    plan_live = _uniform_plan(g, {"s": ("model",), "b": ("data",)},
+                              engine.mesh_axes_dict(mesh))
+    fn = jax.jit(engine.make_runner(g, None, plan=plan_live, mesh=mesh,
+                                    executor="shard_map"))
+    np.testing.assert_allclose(np.asarray(fn(X)), out, rtol=1e-5, atol=1e-6)
