@@ -235,6 +235,18 @@ class CostModel:
         self.mode = mode
         self.coeffs = dict(coeffs) if coeffs else None
 
+    def describe(self) -> str:
+        """Stable one-line description of the pricing this model applies —
+        recorded alongside benchmark output so BENCH artifacts say which
+        cost model produced their numbers."""
+        if not self.coeffs:
+            return self.mode
+        co = ", ".join(f"{k}={v:.3f}" for k, v in sorted(self.coeffs.items()))
+        return f"{self.mode}[{co}]"
+
+    def __repr__(self):
+        return f"CostModel({self.describe()})"
+
     def repart(self, d_from, d_to, bound):
         if self.mode == "collective":
             if self.coeffs:

@@ -749,12 +749,15 @@ def plan_label(g: EinGraph, p: int, label: str) -> Plan:
     return plan
 
 
-def plan_cost(g: EinGraph, plan: Plan) -> int:
-    """Total §7 cost of a fully-labeled plan: node costs + actual reparts
-    between producers and consumers.  (The objective EinDecomp minimizes,
-    evaluated exactly — used to compare heuristic plans apples-to-apples.)"""
-    total = 0
+def plan_cost_by_node(g: EinGraph, plan: Plan) -> dict[int, int]:
+    """Per-node §7 cost of a fully-labeled plan: each einsum/opaque node's
+    own cost (node cost / declared opaque movement) plus the priced
+    repartitions of its input edges, attributed to the *consumer* — the
+    same attribution ``CollectiveTrace.elems_by_node`` uses, so the
+    predicted/traced ratio compares like-for-like per node."""
+    out: dict[int, int] = {}
     for n in g.nodes:
+        total = 0
         if n.kind == "einsum":
             d = plan.d_by_node[n.nid]
             total += node_cost(n.spec, d, node_bounds(g, n.nid))
@@ -772,7 +775,15 @@ def plan_cost(g: EinGraph, plan: Plan) -> int:
                 da = tuple(da_map.get(l, 1) for l in na.labels)
                 target = tuple(d.get(l, 1) for l in ls)
                 total += cost_repart(da, target, na.shape)
-    return total
+            out[n.nid] = total
+    return out
+
+
+def plan_cost(g: EinGraph, plan: Plan) -> int:
+    """Total §7 cost of a fully-labeled plan: node costs + actual reparts
+    between producers and consumers.  (The objective EinDecomp minimizes,
+    evaluated exactly — used to compare heuristic plans apples-to-apples.)"""
+    return sum(plan_cost_by_node(g, plan).values())
 
 
 def opaque_node_bound(g: EinGraph, plan: Plan, nid: int) -> int:

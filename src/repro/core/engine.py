@@ -198,7 +198,8 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
                 cost_mode: str = "paper",
                 offpath_repart: bool = True,
                 executor: str = "gspmd",
-                collective_trace=None) -> Callable:
+                collective_trace=None,
+                fuse: bool = True) -> Callable:
     """Build a jit-able ``f(feed_list) -> outputs`` for the graph.  Feeds are
     passed positionally in input-node order (differentiable wrt any of them).
 
@@ -211,7 +212,10 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
     ``collective_trace`` (a ``core.spmd.CollectiveTrace``) receives the
     static collective schedule of the shard_map executor at build time —
     including the per-node / per-shard-rule attribution (``rule_by_node``,
-    ``by_rule``) of the opaque ring/a2a programs.
+    ``by_rule``) of the opaque ring/a2a programs.  ``fuse`` (default on,
+    shard_map only) routes repartitions through the fused chain planner
+    when it moves fewer wire elems; ``fuse=False`` restores the unfused
+    per-step lowering.
 
     If no ``plan`` is given but planning inputs are (``p``, ``mesh_axes``,
     or a ``mesh`` together with a ``cache``), the runner plans the graph
@@ -263,7 +267,7 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
             raise ValueError("make_runner: executor='shard_map' needs a "
                              "mesh and a (mesh-mode) plan")
         mapped = spmd.make_spmd_runner(g, out_ids, plan=plan, mesh=mesh,
-                                       trace=collective_trace)
+                                       trace=collective_trace, fuse=fuse)
 
         def f_spmd(*arrays):
             outs = mapped(*arrays)

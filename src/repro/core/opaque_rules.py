@@ -77,7 +77,9 @@ class RuleLowering:
     into before calling ``run``; ``out_layout`` is the layout of the value
     *after* ``post_steps`` (which the generic step machinery executes);
     ``events`` are the rule's internal collectives, pre-priced as
-    ``(kind, axes, elems, nbytes)`` so the CollectiveTrace sees ring
+    ``(kind, axes, elems, nbytes)`` — an optional 5th element marks the
+    event as *overlapped* (issued alongside local compute, e.g. the
+    double-buffered ring's K/V hops) — so the CollectiveTrace sees ring
     ppermute steps and a2a bytes without tracing; ``run(args)`` executes the
     node's local program inside the shard_map body.
     """
@@ -86,8 +88,7 @@ class RuleLowering:
     out_layout: Layout
     run: Callable[[Sequence[Any]], Any]
     post_steps: list[tuple] = field(default_factory=list)
-    events: list[tuple[str, tuple[str, ...], int, int]] = field(
-        default_factory=list)
+    events: list[tuple] = field(default_factory=list)
 
 
 @runtime_checkable
@@ -327,9 +328,17 @@ class RingAttentionRule:
     the local GQA group mapping equals the global one; the head_dim must be
     unsharded.  When the ring label is unsharded the rule degenerates to a
     fully local per-shard call — zero collectives, which is exactly what
-    the DP priced."""
+    the DP priced.
+
+    With ``double_buffer`` (the default) the run closure issues ring step
+    t+1's K/V ppermutes *before* block t's flash step: the hop has no data
+    dependency on the step, so XLA's latency-hiding scheduler can overlap
+    the transfer with the compute.  The values are identical — only the
+    issue order changes — and the trace marks the hops ``overlap=True``
+    so the schedule stays statically auditable."""
 
     name = "ring"
+    double_buffer = True
 
     def lower(self, g, node, ax_n, sizes):
         if node.op != "flash_attention" or len(node.inputs) != 3:
@@ -382,6 +391,7 @@ class RingAttentionRule:
         sizes = dict(sizes)
         call = dict(node.call_params)
 
+        db = bool(self.double_buffer)
         events: list[tuple] = []
         if r > 1:
             n_dev = _prod(sizes.values())
@@ -390,7 +400,7 @@ class RingAttentionRule:
             for _step in range(r - 1):
                 for _tensor in range(2):  # k and v each take the ring hop
                     events.append(("ppermute", tuple(ra), n_dev * n_loc,
-                                   n_dev * n_loc * item))
+                                   n_dev * n_loc * item, db))
 
         def run(args):
             import jax.numpy as jnp
@@ -414,12 +424,21 @@ class RingAttentionRule:
             carry = None
             for t in range(r):
                 j = (idx - t) % r  # kv block resident at ring step t
+                if db and t < r - 1:
+                    # double buffer: issue block t+1's hops before block
+                    # t's flash step — no data dependency, so the
+                    # scheduler overlaps the transfer with the compute
+                    k_next = lax.ppermute(k, tuple(ra), perm)
+                    v_next = lax.ppermute(v, tuple(ra), perm)
                 carry = ops.flash_attention_step(
                     q, k, v, carry, causal=causal, window=window, scale=scale,
                     q_offset=q_off, kv_offset=j * sk_loc)
                 if t < r - 1:
-                    k = lax.ppermute(k, tuple(ra), perm)
-                    v = lax.ppermute(v, tuple(ra), perm)
+                    if db:
+                        k, v = k_next, v_next
+                    else:
+                        k = lax.ppermute(k, tuple(ra), perm)
+                        v = lax.ppermute(v, tuple(ra), perm)
             return ops.attention_finalize(carry, q.dtype)
 
         return RuleLowering(arg_layouts=[q_layout, kv_layout, kv_layout],

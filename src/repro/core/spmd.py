@@ -72,6 +72,8 @@ class CollectiveEvent:
     elems: int               # floats crossing the wire, summed over devices
     nbytes: int              # elems * itemsize
     rule: str = ""           # shard rule that emitted it ("" = einsum path)
+    fused: bool = False      # emitted by the fused repartition planner
+    overlap: bool = False    # issued to overlap with local compute
 
 
 class CollectiveTrace:
@@ -97,9 +99,11 @@ class CollectiveTrace:
         self.rule_by_node: dict[int, str] = {}
 
     def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
-            nbytes: int, rule: str = "") -> None:
+            nbytes: int, rule: str = "", *, fused: bool = False,
+            overlap: bool = False) -> None:
         self.events.append(CollectiveEvent(kind, tuple(axes), nid,
-                                           int(elems), int(nbytes), rule))
+                                           int(elems), int(nbytes), rule,
+                                           fused, overlap))
 
     def extend(self, other: "CollectiveTrace") -> None:
         self.events.extend(other.events)
@@ -150,6 +154,28 @@ class CollectiveTrace:
         out: dict[int, int] = {}
         for e in self.events:
             out[e.nid] = out.get(e.nid, 0) + e.nbytes
+        return out
+
+    @property
+    def fused_elems(self) -> int:
+        """Wire elems carried by fused-planner repartitions — each event is
+        attributed to the originating (d_from, d_to) pair's consumer node,
+        never recorded alongside the unfused steps it replaced."""
+        return sum(e.elems for e in self.events if e.fused)
+
+    @property
+    def overlapped_elems(self) -> int:
+        """Wire elems issued to overlap with local compute (the ring's
+        double-buffered K/V hops) — the statically auditable overlap
+        attribution."""
+        return sum(e.elems for e in self.events if e.overlap)
+
+    @property
+    def overlap_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.events:
+            if e.overlap:
+                out[e.kind] = out.get(e.kind, 0) + 1
         return out
 
     def by_rule(self) -> dict[str, dict[str, dict[str, int]]]:
@@ -282,6 +308,136 @@ def plan_repart(src: Layout, dst: Layout) -> list[tuple]:
 
     assert [tuple(t) for t in cur] == list(want), (src, dst, steps)
     return steps
+
+
+def plan_repart_fused(src: Layout, dst: Layout,
+                      sizes: dict[str, int]) -> list[tuple]:
+    """Fused repartition planner: the same (d_from, d_to) chain as
+    ``plan_repart`` with the all_to_all landing condition *relaxed* so
+    consecutive gather+re-slice pairs collapse into single collectives.
+
+    ``plan_repart`` only fires an all_to_all when the moved axis completes
+    the destination dim's target outright (``want[j] == cur[j] + (ax,)``);
+    axes that land mid-prefix fall through to gather-to-prefix + local
+    re-slice, which pays the full ``(k-1)·n_loc`` gather for data the next
+    step throws away.  Here an axis may land whenever it is the *next
+    prefix element* of its destination dim (``want[j][len(cur[j])] == ax``),
+    so e.g. the zoo's lm_head chain
+
+        [all_gather(model, 0), all_gather(data, 2), slice(data, 0)]
+
+    becomes ``[all_gather(model, 0), all_to_all(data, 2, 0)]`` — the
+    gather+slice pair fused into one all_to_all at 1/k the wire cost.
+    When no free slice / all_to_all / equal-size ppermute applies, one
+    minor-most axis of the first out-of-place dim is gathered and the
+    passes rerun — gathers interleave with fusions instead of running as a
+    monolithic gather-all phase.
+
+    Termination: whenever every dim's current layout is a prefix of its
+    target but the repartition is unfinished, some dim's next-needed axis
+    is either idle (a free slice fires) or parked minor-most under a
+    non-prefix dim (the gather fallback fires, since a mesh axis appears
+    at most once per layout); every pass therefore makes progress.
+    """
+    if len(src) != len(dst):
+        raise ValueError(f"repartition rank mismatch: {src} vs {dst}")
+    cur = [list(t) for t in src]
+    want = [tuple(t) for t in dst]
+    steps: list[tuple] = []
+
+    def dim_of(ax: str, layout) -> int | None:
+        for d, axes in enumerate(layout):
+            if ax in axes:
+                return d
+        return None
+
+    def is_prefix(d: int) -> bool:
+        return tuple(cur[d]) == want[d][:len(cur[d])]
+
+    n_axes = sum(len(t) for t in src) + sum(len(t) for t in dst)
+    for _ in range(4 * n_axes + 8):
+        if [tuple(t) for t in cur] == list(want):
+            break
+        progress = False
+        # (a) free slices: an idle axis extends a dim's correct prefix
+        for d in range(len(cur)):
+            while (is_prefix(d) and len(cur[d]) < len(want[d])
+                   and dim_of(want[d][len(cur[d])], cur) is None):
+                ax = want[d][len(cur[d])]
+                steps.append(("slice", ax, d))
+                cur[d].append(ax)
+                progress = True
+        # (b) relaxed all_to_all: ax minor-most at its source dim, landing
+        #     as the NEXT prefix element of its destination dim
+        for i in range(len(cur)):
+            if not cur[i]:
+                continue
+            ax = cur[i][-1]
+            j = dim_of(ax, want)
+            if j is None or j == i:
+                continue
+            if (is_prefix(j) and len(cur[j]) < len(want[j])
+                    and want[j][len(cur[j])] == ax):
+                steps.append(("all_to_all", ax, i, j))
+                cur[i].pop()
+                cur[j].append(ax)
+                progress = True
+        if progress:
+            continue
+        # (c) ppermute: dim stays sharded but by a different equal-size
+        #     axis, old axis idle in the target, new axis idle now
+        for d in range(len(cur)):
+            if (len(cur[d]) == 1 and len(want[d]) == 1
+                    and cur[d][0] != want[d][0]
+                    and sizes[cur[d][0]] == sizes[want[d][0]]
+                    and dim_of(want[d][0], cur) is None
+                    and dim_of(cur[d][0], want) is None):
+                steps.append(("ppermute", cur[d][0], want[d][0], d))
+                cur[d] = [want[d][0]]
+                progress = True
+        if progress:
+            continue
+        # (d) stalled: gather one minor-most axis off the first dim whose
+        #     layout is not a prefix of its target, then rerun the passes
+        for d in range(len(cur)):
+            if cur[d] and not is_prefix(d):
+                steps.append(("all_gather", cur[d][-1], d))
+                cur[d].pop()
+                progress = True
+                break
+        assert progress, (src, dst, cur, want, steps)
+
+    assert [tuple(t) for t in cur] == list(want), (src, dst, steps)
+    return steps
+
+
+def _chain_wire_elems(steps: list[tuple], shape: tuple[int, ...],
+                      sizes: dict[str, int], n_devices: int) -> int:
+    """Total ring-priced wire elems of a step chain applied to local blocks
+    of ``shape`` (the shape evolves step to step)."""
+    total = 0
+    for st in steps:
+        total += _wire_elems(st, shape, sizes, n_devices)
+        shape = _step_shape(shape, st, sizes)
+    return total
+
+
+def plan_repart_best(src: Layout, dst: Layout, sizes: dict[str, int],
+                     src_local: tuple[int, ...],
+                     n_devices: int) -> tuple[list[tuple], bool]:
+    """``(steps, fused)`` — the cheaper of the fused and unfused chains by
+    traced wire elems (ties broken toward fewer steps, then the unfused
+    PR-3 path).  Taking the min guarantees the fused executor never moves
+    more elements than the unfused one on any (src, dst) pair."""
+    unfused = _plan_repart_sized(src, dst, sizes)
+    fused = plan_repart_fused(src, dst, sizes)
+    if fused == unfused:
+        return unfused, False
+    cu = _chain_wire_elems(unfused, src_local, sizes, n_devices)
+    cf = _chain_wire_elems(fused, src_local, sizes, n_devices)
+    if cf < cu or (cf == cu and len(fused) < len(unfused)):
+        return fused, True
+    return unfused, False
 
 
 def _ppermute_size_ok(step, sizes) -> bool:
@@ -423,8 +579,14 @@ def _itemsize(dtype) -> int:
 def _record_steps(trace: CollectiveTrace, steps: list[tuple],
                   shape: tuple[int, ...], sizes: dict[str, int],
                   n_devices: int, nid: int, itemsize: int,
-                  rule: str = "") -> tuple[int, ...]:
-    """Account every step in the trace; returns the final local shape."""
+                  rule: str = "", *, fused: bool = False) -> tuple[int, ...]:
+    """Account every step in the trace; returns the final local shape.
+
+    When ``fused`` is set the chain came from the fused planner: every
+    event carries the flag and is attributed to the consumer node of the
+    originating (d_from, d_to) pair — the steps it replaced are never
+    recorded, so per-node bounds compare like-for-like with no
+    double-counting."""
     for st in steps:
         kind = st[0]
         if kind in WIRE_KINDS:
@@ -438,7 +600,8 @@ def _record_steps(trace: CollectiveTrace, steps: list[tuple],
                 axes = (st[1],)
             elems = _wire_elems(st, shape, sizes, n_devices)
             rec = "psum_scatter" if kind == "psum_scatter_grouped" else kind
-            trace.add(rec, axes, nid, elems, elems * itemsize, rule)
+            trace.add(rec, axes, nid, elems, elems * itemsize, rule,
+                      fused=fused)
         shape = _step_shape(shape, st, sizes)
     return shape
 
@@ -465,7 +628,7 @@ def _scatter_dim(g: EinGraph, plan, nid: int, ax: str,
 
 def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
                   trace: CollectiveTrace, n_dev: int, consumers,
-                  out_set) -> NodeProgram:
+                  out_set, fuse: bool = True) -> NodeProgram:
     """join→agg lowering of one einsum node: per-arg repartitions to the
     plan layout, then the aggregation collectives (psum / pmax / pmin /
     gather-reduce), with sum-aggregations fused to reduce-scatters when the
@@ -477,11 +640,17 @@ def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
     itemsize = _itemsize(n.dtype)
     for ls, a in zip(spec.in_labels, n.inputs):
         req = tuple(_norm_axes(ax_n.get(l, ()), sizes) for l in ls)
-        steps = _plan_repart_sized(layouts[a], req, sizes)
-        prog.arg_steps.append(steps)
         src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+        if fuse:
+            steps, was_fused = plan_repart_best(layouts[a], req, sizes,
+                                                src_shape, n_dev)
+        else:
+            steps, was_fused = _plan_repart_sized(layouts[a], req,
+                                                  sizes), False
+        prog.arg_steps.append(steps)
         got = _record_steps(trace, steps, src_shape, sizes, n_dev,
-                            nid, _itemsize(g.nodes[a].dtype))
+                            nid, _itemsize(g.nodes[a].dtype),
+                            fused=was_fused)
         want_shape = local_shape(g.nodes[a].shape, req, sizes)
         assert got == want_shape, (nid, a, got, want_shape)
 
@@ -526,7 +695,8 @@ def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
 
 
 def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
-                  trace: CollectiveTrace, n_dev: int) -> NodeProgram:
+                  trace: CollectiveTrace, n_dev: int,
+                  fuse: bool = True) -> NodeProgram:
     """Dispatch one opaque node through the shard-rule registry
     (core/opaque_rules.py).  The resolved rule requests per-input layouts
     (repartitioned by the generic machinery, so arbitrary producers are
@@ -551,15 +721,26 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
     trace.rule_by_node[nid] = rule_name
 
     for a, req in zip(n.inputs, low.arg_layouts):
-        steps = _plan_repart_sized(layouts[a], req, sizes)
-        prog.arg_steps.append(steps)
         src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
+        if fuse:
+            steps, was_fused = plan_repart_best(layouts[a], req, sizes,
+                                                src_shape, n_dev)
+        else:
+            steps, was_fused = _plan_repart_sized(layouts[a], req,
+                                                  sizes), False
+        prog.arg_steps.append(steps)
         got = _record_steps(trace, steps, src_shape, sizes, n_dev, nid,
-                            _itemsize(g.nodes[a].dtype), rule_name)
+                            _itemsize(g.nodes[a].dtype), rule_name,
+                            fused=was_fused)
         want_shape = local_shape(g.nodes[a].shape, req, sizes)
         assert got == want_shape, (nid, a, got, want_shape)
-    for kind, axes, elems, nbytes in low.events:
-        trace.add(kind, axes, nid, elems, nbytes, rule_name)
+    for ev in low.events:
+        # rules may tag an event as overlapped (5th element) — the ring's
+        # double-buffered K/V hops issued alongside local compute
+        kind, axes, elems, nbytes = ev[:4]
+        overlap = bool(ev[4]) if len(ev) > 4 else False
+        trace.add(kind, axes, nid, elems, nbytes, rule_name,
+                  overlap=overlap)
     prog.post_steps = list(low.post_steps)
     prog.layout = low.out_layout
     # rule post steps are layout-conforming local slices (free, no wire
@@ -569,12 +750,19 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
 
 
 def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
-                   out_ids: Sequence[int] | None = None) -> Schedule:
+                   out_ids: Sequence[int] | None = None, *,
+                   fuse: bool = True) -> Schedule:
     """Lower (graph, plan, mesh shape) to the static collective schedule.
 
     Pure Python over static shapes — no jax, no devices — so trace
     assertions (e.g. "an unsharded plan emits zero collectives") run on any
     host, and the runner body just replays the recorded decisions.
+
+    ``fuse=True`` (the default) routes every repartition through
+    ``plan_repart_best`` — the fused chain when it moves strictly fewer
+    wire elems, the PR-3 unfused chain otherwise; ``fuse=False`` restores
+    the unfused lowering verbatim (the equivalence baseline
+    tests/test_spmd_fastpath.py diffs against).
     """
     sizes = {a: int(s) for a, s in mesh_axes.items()}
     n_dev = math.prod(sizes.values()) if sizes else 1
@@ -597,9 +785,10 @@ def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
             prog.layout = layouts[n.inputs[0]]
         elif n.kind == "einsum":
             prog = _lower_einsum(g, n, plan, ax_n, layouts, sizes, trace,
-                                 n_dev, consumers, out_set)
+                                 n_dev, consumers, out_set, fuse)
         else:
-            prog = _lower_opaque(g, n, ax_n, layouts, sizes, trace, n_dev)
+            prog = _lower_opaque(g, n, ax_n, layouts, sizes, trace, n_dev,
+                                 fuse)
 
         layouts[nid] = prog.layout
         programs.append(prog)
@@ -776,13 +965,16 @@ def make_spmd_runner(
     plan,
     mesh,
     trace: CollectiveTrace | None = None,
+    fuse: bool = True,
 ) -> Callable:
     """Build ``f(*input_arrays) -> tuple(outputs)`` executing the planned
     graph as one ``shard_map`` with explicit collectives.
 
     Requires a mesh-mode plan (``plan.axes_by_node``); ``trace`` (optional)
     receives the static ``CollectiveEvent`` schedule at build time.
-    Jit-able and differentiable like the GSPMD runner.
+    ``fuse=False`` disables the fused repartition planner (the unfused
+    PR-3 lowering, kept as the equivalence baseline).  Jit-able and
+    differentiable like the GSPMD runner.
     """
     from repro.core import engine
 
@@ -795,7 +987,7 @@ def make_spmd_runner(
             "plan with mesh_axes so labels map to named mesh axes")
     out_ids = list(out_ids) if out_ids is not None else g.outputs()
     sizes = engine.mesh_axes_dict(mesh)
-    sched = build_schedule(g, plan, sizes, out_ids)
+    sched = build_schedule(g, plan, sizes, out_ids, fuse=fuse)
     if trace is not None:
         trace.extend(sched.trace)
 

@@ -129,7 +129,9 @@ class Program:
     def compile(self, *, mesh=None, mesh_axes: dict[str, int] | None = None,
                 p: int | None = None, cost_model: str = "paper",
                 cache=None, offpath_repart: bool = True,
-                executor: str = "gspmd", jit: bool = True) -> "CompiledProgram":
+                executor: str = "gspmd", jit: bool = True,
+                fuse: bool = True,
+                donate: bool | Sequence[str] = False) -> "CompiledProgram":
         """Run EinDecomp (through the plan cache) and build the runner.
 
         Planning inputs mirror ``eindecomp``/``make_runner``: a jax ``mesh``
@@ -150,6 +152,16 @@ class Program:
         collectives (core/spmd.py; requires a ``mesh``).  The shard_map
         executor's static collective schedule is exposed as
         ``CompiledProgram.collectives``.
+
+        ``fuse`` (shard_map only; default on) routes repartitions through
+        the fused chain planner whenever the fused chain moves fewer wire
+        elems (``fuse=False`` restores the unfused per-step lowering).
+        ``donate=True`` donates **every** input buffer to the jit-compiled
+        runner (``jax.jit(donate_argnums=...)``), letting XLA reuse the
+        feeds' device memory for outputs and temporaries; a sequence of
+        input names donates just those.  Donation invalidates the caller's
+        fed jax arrays after the call (numpy feeds are copied to device
+        and always safe), so it is strictly opt-in; requires ``jit=True``.
         """
         from repro.core.decomp import eindecomp
         from repro.core.engine import EXECUTORS, mesh_axes_dict
@@ -178,7 +190,7 @@ class Program:
             raise ValueError("compile: cache given but nothing to plan "
                              "with — pass mesh, mesh_axes, or p")
         return CompiledProgram(self, plan=plan, mesh=mesh, jit=jit,
-                               executor=executor)
+                               executor=executor, fuse=fuse, donate=donate)
 
 
 class CompiledProgram:
@@ -194,11 +206,13 @@ class CompiledProgram:
     ``.collectives_by_rule`` breaks the trace down per opaque shard rule
     (``"ring"`` / ``"a2a"`` / ``"replicate"``; ``""`` is the einsum path),
     and ``.collectives.rule_by_node`` records which rule lowered each
-    opaque node.
+    opaque node.  ``.donate_argnums`` records which positional inputs the
+    jit-compiled runner donates (empty unless compiled with ``donate``).
     """
 
     def __init__(self, program: Program, *, plan=None, mesh=None,
-                 jit: bool = True, executor: str = "gspmd"):
+                 jit: bool = True, executor: str = "gspmd",
+                 fuse: bool = True, donate: bool | Sequence[str] = False):
         import jax
 
         from repro.core import engine
@@ -220,14 +234,35 @@ class CompiledProgram:
 
             self.collectives = spmd.CollectiveTrace()
             _positional = spmd.make_spmd_runner(
-                g, out_ids, plan=plan, mesh=mesh, trace=self.collectives)
+                g, out_ids, plan=plan, mesh=mesh, trace=self.collectives,
+                fuse=fuse)
         else:
             def _positional(*arrays):
                 vals = engine.run(g, dict(zip(in_ids, arrays)),
                                   plan=plan, mesh=mesh)
                 return tuple(vals[o] for o in out_ids)
 
-        self._fn = jax.jit(_positional) if jit else _positional
+        self.donate_argnums = self._donate_argnums(donate)
+        if self.donate_argnums and not jit:
+            raise ValueError("donate needs jit=True — donation is a "
+                             "jax.jit(donate_argnums=...) contract")
+        if jit:
+            self._fn = jax.jit(_positional,
+                               donate_argnums=self.donate_argnums)
+        else:
+            self._fn = _positional
+
+    def _donate_argnums(self, donate) -> tuple[int, ...]:
+        if donate is False or donate is None:
+            return ()
+        if donate is True:
+            return tuple(range(len(self._in_names)))
+        names = list(donate)
+        unknown = sorted(set(names) - set(self._in_names))
+        if unknown:
+            raise KeyError(f"donate: unknown inputs {unknown}; "
+                           f"program inputs are {sorted(self._in_names)}")
+        return tuple(i for i, n in enumerate(self._in_names) if n in names)
 
     @property
     def graph(self) -> EinGraph:

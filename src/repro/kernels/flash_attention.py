@@ -300,6 +300,10 @@ def flash_attention_step(
             pltpu.VMEM((blk_q, 1), jnp.float32),   # l
             pltpu.VMEM((blk_q, d), jnp.float32),   # acc
         ],
+        # the incoming carry is dead after the call: alias each (m, l, acc)
+        # input buffer to its output so XLA updates the ring state in place
+        # instead of allocating fresh HBM every ring step
+        input_output_aliases={4: 0, 5: 1, 6: 2},
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,65 @@
+"""Static predicted/traced cost-honesty trajectory for the model zoo.
+
+The §8 DP optimizes the paper's §7 p2p upper bound; the shard_map executor
+realizes the plan with ring-priced collectives.  The ratio between the two
+— ``plan_cost / traced wire elems`` — is how much the DP *overprices* the
+schedule it picked: a large ratio means the DP may forgo plans it misprices
+(the gap the calibrated ``CostModel.with_measured`` closes), a ratio that
+*shrinks* across PRs means the executor is squandering wire savings on
+redundant movement.
+
+Everything here is a pure function of (config, plan, mesh shape): the plan
+comes from the deterministic paper-mode DP and the traced elems from the
+static ``build_schedule`` — no jax arrays, no devices — so the per-family
+ratios are bit-identical on every host.  ``benchmarks/bench_spmd.py``
+records them into ``BENCH_spmd.json`` and
+``tests/test_spmd_fastpath.py`` pins them against that committed
+trajectory (update with ``REPRO_UPDATE_RATIOS=1``).
+"""
+from __future__ import annotations
+
+import math
+
+#: the CI bench mesh: 2x4 forced host devices
+MESH_AXES = {"data": 2, "model": 4}
+
+#: the zoo families the trajectory tracks (bench_spmd's FAMILIES)
+FAMILIES = ("llama-7b", "mixtral-8x7b", "xlstm-125m", "hymba-1.5b")
+
+
+def family_ratio(arch: str, phase: str = "prefill",
+                 mesh_axes: dict[str, int] | None = None,
+                 fuse: bool = True) -> dict:
+    """Deterministic predicted/traced numbers for one zoo family.
+
+    Returns ``{"arch", "phase", "predicted_elems", "traced_elems",
+    "ratio"}`` where ``ratio = predicted / traced`` under the paper-mode
+    plan and the static fused schedule.  Pure host Python.
+    """
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.core import spmd
+    from repro.core.decomp import eindecomp, plan_cost
+    from repro.models.eingraphs import program_for
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    mesh_axes = dict(mesh_axes or MESH_AXES)
+    cfg = reduced(get_config(arch))
+    prog = program_for(cfg, ShapeConfig("bench", phase, 32, 4))
+    g = prog.graph
+    make_stub_opaques(capacity_of(g))
+    # offpath_repart=True mirrors Program.compile's planning default, so
+    # the trajectory prices the same plan bench_spmd executes
+    plan = eindecomp(g, math.prod(mesh_axes.values()), mesh_axes=mesh_axes,
+                     offpath_repart=True)
+    out_ids = [prog._out[k] for k in prog._out]
+    sched = spmd.build_schedule(g, plan, mesh_axes, out_ids, fuse=fuse)
+    predicted = int(plan_cost(g, plan))
+    traced = int(sched.trace.total_elems)
+    return {"arch": arch, "phase": phase,
+            "predicted_elems": predicted, "traced_elems": traced,
+            "ratio": round(predicted / max(traced, 1), 4)}
+
+
+def family_ratios(fams=FAMILIES, **kw) -> list[dict]:
+    return [family_ratio(a, **kw) for a in fams]
