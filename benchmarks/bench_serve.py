@@ -1,0 +1,252 @@
+"""Serving-tier benchmark: continuous batching vs sequential per-request
+serve(), on a forced 8-device host mesh, with the paged-KV pricing check.
+
+For each zoo family (dense attention, recurrent xLSTM, windowed hybrid):
+
+  1. build a mixed-length workload and serve it twice from cold:
+     sequentially (one ``launch.serve.serve`` call per request — each call
+     re-jits its steps, the pre-serving-tier reality) and through
+     ``repro.serving.ServingEngine`` (continuous batching over the paged
+     KV pool, prefill through the shape-bucket registry);
+  2. assert the engine's generations are **bit-for-bit identical** per
+     request to the sequential baseline (the baseline is called with
+     ``kv_len`` equal to the engine's gather extent so both attend over
+     the same masked span — masked lanes are exact fp zeros, and the
+     paged pool is time-ordered like the dense cache);
+  3. with ``--check``, compile the paged decode graph with the shard_map
+     executor and assert, per ``kv_block_gather`` node, that the rule is
+     ``paged`` and the traced wire elems stay within
+     ``decomp.opaque_node_bound`` — the planner's price is an upper bound
+     on what the executor actually moves (bench_spmd's contract, extended
+     to the serving tier's op).
+
+Rows print as ``SERVEROW ...`` and land in ``BENCH_serve.json``
+(``{name, metric, value, unit}``) at the repo root.
+
+MoE archs are excluded from the bitwise assert (expert capacity couples
+batch rows, so batched decode is not bitwise-equal to batch-1 decode by
+construction); the three asserted families cover dense, recurrent and
+windowed-hybrid cache handling.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_serve.py [--check]
+      [--requests 10] [--max-new 8] [--bench-out BENCH_serve.json]
+"""
+import argparse
+import time
+import warnings
+from pathlib import Path
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(8)
+
+warnings.filterwarnings("ignore", message=".*[Dd]onat")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.decomp import opaque_node_bound
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import serve
+from repro.models import transformer as tf
+from repro.models.eingraphs import program_for
+from repro.serving import ServingEngine
+
+FAMILIES = ["llama-7b", "xlstm-125m", "hymba-1.5b"]
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+BATCH = 4
+BLOCK = 8
+MAX_SEQ = 40          # per-request prompt+generated capacity ceiling
+
+
+def _workload(cfg, n: int, rng) -> list[np.ndarray]:
+    """Mixed prompt lengths, several repeating (bucket reuse) and several
+    unique (bucket growth)."""
+    lengths = [5, 13, 16, 9, 21, 5, 32, 13, 7, 16, 27, 9]
+    return [rng.integers(0, cfg.vocab, size=(L,)).astype(np.int32)
+            for L in lengths[:n]]
+
+
+def _check_paged_pricing(cfg, arch: str, check: bool) -> list[dict]:
+    """shard_map-compile the paged decode cell; per kv_block_gather node
+    assert rule == 'paged' and traced <= priced."""
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    rng = np.random.default_rng(0)
+    W = MAX_SEQ // BLOCK
+    shape = ShapeConfig("bench", "decode", W * BLOCK, BATCH)
+    prog = program_for(cfg, shape, kv_block=BLOCK)
+    g = prog.graph
+    make_stub_opaques(capacity_of(g))
+    mesh = make_host_mesh((2, 4))
+    run_s = prog.compile(mesh=mesh, executor="shard_map")
+
+    n_blocks = BATCH * W + 1
+    feeds = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if n.name == "block_tables":
+            feeds[n.name] = rng.integers(0, n_blocks,
+                                         size=n.shape).astype(np.int32)
+        elif str(np.dtype(n.dtype)) == "int32":
+            feeds[n.name] = rng.integers(0, cfg.vocab,
+                                         size=n.shape).astype(np.int32)
+        else:
+            feeds[n.name] = (rng.normal(size=n.shape) * 0.05).astype(
+                np.float32)
+    outs = run_s(feeds)
+    jax.block_until_ready(list(outs.values()))
+
+    traced = run_s.collectives
+    rows = []
+    for n in g.nodes:
+        if n.kind != "opaque" or n.op != "kv_block_gather":
+            continue
+        row = {"nid": n.nid, "name": n.name,
+               "rule": traced.rule_by_node.get(n.nid, "?"),
+               "traced_elems": traced.elems_by_node.get(n.nid, 0),
+               "bound_elems": opaque_node_bound(g, run_s.plan, n.nid)}
+        rows.append(row)
+        ok = ("OK" if row["rule"] == "paged"
+              and row["traced_elems"] <= row["bound_elems"] else "BAD")
+        print(f"        paged  {row['name']:12s} rule={row['rule']:9s} "
+              f"traced={row['traced_elems']:>10,} "
+              f"bound={row['bound_elems']:>10,} {ok}", flush=True)
+        if check:
+            assert row["rule"] == "paged", (
+                f"{arch}/{row['name']}: kv_block_gather lowered through "
+                f"{row['rule']!r}, not the paged rule")
+            assert row["traced_elems"] <= row["bound_elems"], (
+                f"{arch}/{row['name']}: paged rule moved "
+                f"{row['traced_elems']:,} wire elems, over the priced "
+                f"bound {row['bound_elems']:,}")
+    has_attn = any(b in ("attn", "hymba") for b in cfg.block_pattern)
+    if check and has_attn:
+        assert rows, f"{arch}: no kv_block_gather nodes in the paged cell"
+    return rows
+
+
+def bench_family(arch: str, n_requests: int, max_new: int,
+                 check: bool) -> dict:
+    rng = np.random.default_rng(0)
+    cfg = reduced(get_config(arch))
+    prompts = _workload(cfg, n_requests, rng)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = make_host_mesh()
+
+    # continuous batching from cold (jit + planning included: serving is
+    # a from-process-start workload, and the registry's reuse across
+    # requests is exactly what is being measured)
+    t0 = time.perf_counter()
+    eng = ServingEngine(cfg, batch=BATCH, max_seq=MAX_SEQ, block=BLOCK,
+                        params=params, mesh=mesh)
+    rids = [eng.submit(p, max_new) for p in prompts]
+    results, metrics = eng.run()
+    t_engine = time.perf_counter() - t0
+    n_tok = sum(len(results[r]) for r in rids)
+
+    # sequential per-request baseline, same params, same process; kv_len
+    # pinned to the engine's gather extent for the bitwise comparison
+    t0 = time.perf_counter()
+    base = {}
+    for rid, p in zip(rids, prompts):
+        gen, _ = serve(cfg, p[None, :], max_new=max_new, params=params,
+                       kv_len=eng.seq, mesh=mesh)
+        base[rid] = gen[0]
+    t_seq = time.perf_counter() - t0
+
+    mismatched = [r for r in rids
+                  if not np.array_equal(results[r], base[r])]
+    if check:
+        assert not mismatched, (
+            f"{arch}: engine generations diverge from sequential serve() "
+            f"for requests {mismatched}")
+        assert t_engine < t_seq, (
+            f"{arch}: continuous batching ({t_engine:.2f}s) did not beat "
+            f"sequential serve() ({t_seq:.2f}s) on the mixed workload")
+
+    row = {
+        "arch": arch,
+        "requests": len(rids),
+        "tokens": n_tok,
+        "t_engine_s": t_engine,
+        "t_sequential_s": t_seq,
+        "speedup": t_seq / max(t_engine, 1e-9),
+        "engine_tok_per_s": n_tok / max(t_engine, 1e-9),
+        "sequential_tok_per_s": n_tok / max(t_seq, 1e-9),
+        "bitwise": not mismatched,
+        "mean_occupancy": metrics.mean_occupancy,
+        "mean_ttft_s": (float(np.mean(list(metrics.ttft_s.values())))
+                        if metrics.ttft_s else 0.0),
+        "decode_steps": metrics.decode_steps,
+        "registry_compiles": eng.registry.stats.compiles,
+        "registry_lookups": eng.registry.stats.lookups,
+        "plan_time_s": eng.registry.stats.plan_time_s,
+    }
+    print(f"SERVEROW {arch:14s} reqs={row['requests']:<3d} "
+          f"engine={t_engine:7.2f}s seq={t_seq:7.2f}s "
+          f"speedup={row['speedup']:5.2f}x "
+          f"tok/s={row['engine_tok_per_s']:7.2f} "
+          f"occ={row['mean_occupancy']:.2f} "
+          f"bitwise={'YES' if row['bitwise'] else 'NO'}", flush=True)
+    row["paged_nodes"] = _check_paged_pricing(cfg, arch, check)
+    return row
+
+
+def _bench_rows(rows: list[dict]) -> list[dict]:
+    out = []
+    for r in rows:
+        a = r["arch"]
+        out += [
+            {"name": f"serve/{a}/engine", "metric": "tok_per_s",
+             "value": round(r["engine_tok_per_s"], 3), "unit": "tok/s"},
+            {"name": f"serve/{a}/sequential", "metric": "tok_per_s",
+             "value": round(r["sequential_tok_per_s"], 3), "unit": "tok/s"},
+            {"name": f"serve/{a}/speedup", "metric": "throughput_ratio",
+             "value": round(r["speedup"], 3), "unit": "ratio"},
+            {"name": f"serve/{a}/ttft", "metric": "mean_ttft",
+             "value": round(r["mean_ttft_s"] * 1e3, 1), "unit": "ms"},
+            {"name": f"serve/{a}/occupancy", "metric": "mean_occupancy",
+             "value": round(r["mean_occupancy"], 3), "unit": "ratio"},
+            {"name": f"serve/{a}/bitwise", "metric": "generations_match",
+             "value": int(r["bitwise"]), "unit": "bool"},
+        ]
+        for o in r["paged_nodes"]:
+            out.append({"name": f"serve/{a}/paged/{o['name']}",
+                        "metric": "wire_elems",
+                        "value": o["traced_elems"], "unit": "elems"})
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--arch", default=None, help="one family (default: all)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert bitwise generations, engine < sequential "
+                    "wall-clock, and traced <= priced per paged node")
+    ap.add_argument("--bench-out",
+                    default=str(REPO_ROOT / "BENCH_serve.json"),
+                    help="perf-trajectory JSON (default: repo root)")
+    args = ap.parse_args()
+
+    print(f"devices: {len(jax.devices())}")
+    fams = [args.arch] if args.arch else FAMILIES
+    rows = [bench_family(a, args.requests, args.max_new, args.check)
+            for a in fams]
+    ok = sum(r["bitwise"] for r in rows)
+    print(f"\n{ok}/{len(rows)} families bitwise vs sequential serve()")
+    if args.bench_out:
+        from _bench_io import write_bench_json
+
+        write_bench_json(_bench_rows(rows), Path(args.bench_out))
+
+
+if __name__ == "__main__":
+    main()

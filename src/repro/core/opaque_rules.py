@@ -34,6 +34,11 @@ Built-in rules (the registry; ``register_rule`` admits new ones):
                   the sequence label is non-shardable (recurrence), the
                   channel labels shard freely — a local scan per channel
                   shard, where the old fallback gathered full state.
+  ``paged``     — the serving tier's paged KV cache (``kv_block_gather``):
+                  each device gathers its own block-table rows from its own
+                  pool shard — batch/head/head_dim-parallel lookup with
+                  **zero collectives**, including a t-sharded cache view
+                  when the stripes are whole blocks.
   ``replicate`` — the fallback: gather inputs, run the fused op densely on
                   every device, re-slice the output to the plan layout
                   (free local slices).  Used for every opaque op without a
@@ -446,6 +451,79 @@ class RingAttentionRule:
 
 
 # ---------------------------------------------------------------------------
+# paged: the serving tier's block-table KV gather — zero collectives
+# ---------------------------------------------------------------------------
+
+
+class PagedKVRule:
+    """Per-shard lowering of ``kv_block_gather`` (the paged KV cache).
+
+    The gather is independent along batch, kv-heads and head_dim: each
+    device looks its own table rows up in its own pool shard.  Structural
+    contract: inputs ``pool (n, p, k, d)`` / ``tables (b, w)``, output
+    ``(b, k, t, d)``; the block-index labels ``n``/``p``/``w`` must be
+    unsharded (a split block has no local lookup), the pool is co-sharded
+    with the output on the head labels, the table on batch.
+
+    A sharded cache-time label ``t`` (what the OpDef's a2a comm entry
+    prices) is realized *locally* too: it requires ``t = w*p`` exactly and
+    the shard count to divide ``w``, so each device's t-stripe is a whole
+    number of blocks — the table is sliced along ``w`` to match and each
+    device gathers its stripe from the (replicated-over-t) pool.  Zero
+    wire either way, which keeps the traced schedule strictly under the
+    priced a2a bound.  Any failed precondition returns ``None`` →
+    replicate fallback.
+    """
+
+    name = "paged"
+
+    def lower(self, g, node, ax_n, sizes):
+        if node.op != "kv_block_gather" or len(node.inputs) != 2:
+            return None
+        if len(node.in_labels) != 2 or len(node.in_labels[0]) != 4 \
+                or len(node.in_labels[1]) != 2:
+            return None
+        n_l, p_l, k_l, d_l = node.in_labels[0]
+        b_l, w_l = node.in_labels[1]
+        if len(node.labels) != 4:
+            return None
+        t_l = node.labels[2]
+        if tuple(node.labels) != (b_l, k_l, t_l, d_l):
+            return None
+
+        def norm(label):
+            return _spmd._norm_axes(ax_n.get(label, ()), sizes)
+
+        if norm(n_l) or norm(p_l) or norm(w_l):
+            return None  # block-index labels stay whole
+        ba, ka, ta, da = norm(b_l), norm(k_l), norm(t_l), norm(d_l)
+        pool_n = g.nodes[node.inputs[0]]
+        tab_n = g.nodes[node.inputs[1]]
+        _n_blk, blk, kh, hd = pool_n.shape
+        batch, w = tab_n.shape
+        kv_len = node.shape[2]
+        for extent, axes in ((batch, ba), (kh, ka), (hd, da)):
+            if extent % max(_prod(sizes[x] for x in axes), 1):
+                return None
+        rt = _prod(sizes[x] for x in ta)
+        if rt > 1 and (kv_len != w * blk or w % rt):
+            return None  # t-stripes must be whole blocks, no truncated tail
+
+        def run(args):
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
+            pool, tables = (jnp.asarray(a) for a in args)
+            kvl = kv_len if rt <= 1 else tables.shape[1] * pool.shape[1]
+            return ops.kv_block_gather(pool, tables, kvl)
+
+        return RuleLowering(
+            arg_layouts=[((), (), ka, da), (ba, ta)],
+            out_layout=(ba, ka, ta, da), run=run)
+
+
+# ---------------------------------------------------------------------------
 # a2a: expert-parallel MoE dispatch / combine
 # ---------------------------------------------------------------------------
 
@@ -630,3 +708,4 @@ register_rule(ReplicateRule())
 register_rule(LocalRule())
 register_rule(RingAttentionRule())
 register_rule(A2AMoERule())
+register_rule(PagedKVRule())

@@ -144,6 +144,41 @@ defop("gather_rows", "v a, b s -> b s a", fn=_gather_rows, vjp="auto",
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache: the serving tier's block-table lookup, declared so the
+# planner prices it and the shard_map executor lowers it like any other op
+# (the ``gather_rows`` pattern generalized to a two-level block gather).
+# ``pool (n, p, k, d)`` holds ``n`` blocks of ``p`` cache rows; ``tables
+# (b, w)`` maps each sequence's blocks into the pool; the output is the
+# time-ordered cache view ``(b, k, t, d)`` with ``t`` bound by the
+# ``kv_len`` call param (t <= w*p; the last block's padding is truncated).
+#
+# Sharding: batch / kv-heads / head_dim shard freely (the gather is
+# independent along them); the cache-time label ``t`` is declared in the
+# comm template as an all-to-all — sharding t re-buckets table stripes
+# across devices — which the bound ``paged`` rule realizes with zero wire
+# whenever the pool is replicated over the t-axes (each device gathers its
+# own stripe of table rows locally), so traced <= priced holds with room.
+# The block-index labels n/p/w never shard (a split block has no local
+# lookup), hence their absence from the shardable set.
+# ---------------------------------------------------------------------------
+
+
+def _kv_block_gather(pool, tables, kv_len):
+    from repro.kernels import ops
+
+    return ops.kv_block_gather(pool, tables, int(kv_len))
+
+
+defop(
+    "kv_block_gather", "n p k d, b w -> b k t d",
+    fn=_kv_block_gather, vjp="auto", check_impl=False,
+    shardable="b k d t", param_bounds={"t": "kv_len"},
+    in_dtypes=(None, "int32"),
+    comm=[{"kind": "a2a", "label": "t", "input": -1, "rule": "paged"}],
+    shard_rule="paged")
+
+
+# ---------------------------------------------------------------------------
 # broadcast_to: the autodiff adjoint carrier (labels/shape arrive as call
 # params — fully dynamic, so no signature and no inference).
 # ---------------------------------------------------------------------------

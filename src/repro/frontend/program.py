@@ -269,6 +269,20 @@ class CompiledProgram:
         return self.program.graph
 
     @property
+    def canonical_key(self) -> str:
+        """Stable identity of this compiled handle: the canonical graph key
+        (same string the plan cache is keyed on — structurally identical
+        programs collide by design) plus the planning signature.  The
+        serving tier's bucket registry uses it to recognize that a shape
+        cell already holds a live compiled handle across restarts/buckets."""
+        from repro.core import canon
+
+        gk = canon.graph_key(self.graph)
+        if self.plan is None:
+            return f"{gk}:unplanned:{self.executor}"
+        return f"{gk}:p{self.plan.p}:{self.plan.mode}:{self.executor}"
+
+    @property
     def collectives_by_rule(self) -> dict | None:
         """{rule: {kind: {count, elems, bytes}}} for the shard_map executor
         (None under gspmd) — the per-rule view of ``.collectives``."""

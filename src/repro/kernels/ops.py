@@ -54,6 +54,29 @@ def attention_finalize(carry, dtype):
     return ref.attention_finalize(carry, dtype)
 
 
+def kv_block_gather(pool, tables, kv_len: int):
+    """Paged-KV block-table lookup: the serving tier's cache view.
+
+    ``pool (n, p, k, d)`` is the block pool (``n`` blocks of ``p`` cache
+    rows); ``tables (b, w)`` int32 maps each sequence's block index to a
+    pool row.  Returns the gathered time-ordered cache ``(b, k, t, d)``
+    with ``t = kv_len`` — ``kv_len <= w*p``; the padded tail of the last
+    block is truncated.  Pure gather + reshape, so the generic VJP is a
+    scatter-add into the pool (pool grads only; tables are integer).
+    """
+    pool = jnp.asarray(pool)
+    tables = jnp.asarray(tables).astype(jnp.int32)
+    n, p, k, d = pool.shape
+    b, w = tables.shape
+    if kv_len > w * p:
+        raise ValueError(
+            f"kv_block_gather: kv_len={kv_len} exceeds the table capacity "
+            f"w*p={w * p}")
+    g = jnp.take(pool, tables.reshape(-1), axis=0)       # (b*w, p, k, d)
+    g = g.reshape(b, w * p, k, d)[:, :kv_len]
+    return jnp.transpose(g, (0, 2, 1, 3))                # (b, k, t, d)
+
+
 def matmul(x, w, *, impl: str = "auto", **blocks):
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.matmul(x, w)

@@ -1,10 +1,15 @@
 """Serving driver: batched prefill + decode loop with KV/state caches.
 
-``serve`` takes a batch of prompts, prefillls them in one fused forward
+``serve`` takes a batch of prompts, prefills them in one fused forward
 (returning per-layer caches), then decodes greedily token-by-token with the
 jitted serve_step.  Sliding-window archs keep ring-buffer caches, recurrent
 archs carry constant-size state — the 500k-token decode shape runs in O(1)
-memory per token (DESIGN.md §4).
+memory per token (docs/architecture.md, "Serving tier").
+
+``--continuous`` switches to the serving tier proper
+(``repro.serving.ServingEngine``): slot-based continuous batching over a
+paged KV-block pool, with prefill programs resolved through the
+shape-bucket registry and the plan cache.
 """
 from __future__ import annotations
 
@@ -68,20 +73,27 @@ def decode_loop(decode, params, caches, first_tok, prompt_len: int,
     thrown away — one wasted step per request, and a tok/s figure counting
     a token the decode path never produced.)
 
+    Tokens are accumulated **on device** and fetched with a single host
+    transfer at the end: the previous ``np.asarray(tok)`` per iteration
+    blocked the host on every step, serializing dispatch against compute
+    and capping tok/s at the round-trip latency — greedy argmax feeds the
+    next step from device memory just fine, so the loop now runs fully
+    async under jax's dispatch queue.
+
     Returns ``(generations (b, max_new) int32, caches, decode_steps)``.
     """
     b = first_tok.shape[0]
     if max_new <= 0:
         return np.zeros((b, 0), np.int32), caches, 0
-    outs = [np.asarray(first_tok)[:, 0]]
+    outs = [first_tok]
     tok = first_tok
     steps = 0
     for i in range(max_new - 1):
         logits, caches = decode(params, tok, caches, jnp.int32(prompt_len + i))
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        outs.append(np.asarray(tok)[:, 0])
+        outs.append(tok)
         steps += 1
-    return np.stack(outs, axis=1), caches, steps
+    return np.asarray(jnp.concatenate(outs, axis=1)), caches, steps
 
 
 def serve(cfg, prompts: np.ndarray, *, max_new: int = 32, mesh=None,
@@ -152,12 +164,46 @@ def main() -> None:
                     help="plan realization: GSPMD sharding hints, or the "
                          "explicit-collective shard_map executor "
                          "(prints its static collective schedule)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (repro.serving): "
+                         "slot scheduler + paged KV pool + bucket registry; "
+                         "prompts get mixed lengths around --prompt-len")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="[--continuous] number of requests to submit")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="[--continuous] KV pool block size (cache rows)")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="[--continuous] per-request capacity ceiling "
+                         "(prompt+generated); default prompt-len + max-new")
+    ap.add_argument("--bucket", default="auto",
+                    choices=["auto", "pow2", "exact"],
+                    help="[--continuous] prefill bucket policy: pow2 "
+                         "rounding for pad-free archs under 'auto'")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     rng = np.random.default_rng(0)
+
+    if args.continuous:
+        from repro.serving import ServingEngine
+
+        max_seq = args.max_seq or (args.prompt_len + args.max_new)
+        eng = ServingEngine(cfg, batch=args.batch, max_seq=max_seq,
+                            block=args.kv_block, plan_cache=args.plan_cache,
+                            bucket=args.bucket)
+        for _ in range(args.requests):
+            plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            eng.submit(rng.integers(0, cfg.vocab, size=(plen,)), args.max_new)
+        results, metrics = eng.run()
+        for rid in sorted(results):
+            print(f"request {rid}: {results[rid]}")
+        print(metrics.summary())
+        print(eng.registry.stats)
+        return
+
     prompts = rng.integers(0, cfg.vocab,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
     gen, stats = serve(cfg, prompts, max_new=args.max_new,

@@ -63,3 +63,33 @@ def make_serve_step(cfg, *, policy=None, mesh=None, unroll: bool = False) -> Cal
                               policy=policy, mesh=mesh, unroll=unroll)
 
     return serve_step
+
+
+def make_bucket_prefill_step(cfg, *, policy=None, mesh=None,
+                             unroll: bool = False) -> Callable:
+    """Prefill over a bucket-padded prompt: identical to ``prefill_step``
+    except the LM head runs at a caller-supplied ``last_index`` (the last
+    *real* token) instead of the final — padded — position.  Structurally
+    the same graph, so the two share a plan-cache entry per shape cell."""
+
+    def bucket_prefill_step(params, batch, last_index):
+        logits, caches, _ = tf.forward(
+            params, batch["tokens"], cfg,
+            prefix_embeds=batch.get("prefix_embeds"),
+            policy=policy, mesh=mesh, collect_cache=True, remat=False,
+            unroll=unroll, logit_index=last_index)
+        return logits, caches
+
+    return bucket_prefill_step
+
+
+def make_paged_serve_step(cfg, *, policy=None, mesh=None,
+                          unroll: bool = False) -> Callable:
+    """Continuous-batching decode step: per-slot positions + block tables
+    into the paged KV pool (``kv_block_gather`` OpDef)."""
+
+    def paged_serve_step(params, tokens, caches, tables, pos):
+        return tf.decode_step_paged(params, tokens, caches, tables, pos, cfg,
+                                    policy=policy, mesh=mesh, unroll=unroll)
+
+    return paged_serve_step

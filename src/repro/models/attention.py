@@ -117,14 +117,73 @@ def attention_decode(p: dict, x: jnp.ndarray, cache: KVCache, pos: jnp.ndarray,
     return out, KVCache(k, v)
 
 
+class PagedKVCache(NamedTuple):
+    """Block-pool KV cache (the serving tier): ``n_blocks`` blocks of
+    ``block`` cache rows each; sequences own disjoint block sets through
+    per-slot block tables.  Block 0 is reserved as scratch (inactive slots
+    write there; nothing valid ever reads it)."""
+
+    k: jnp.ndarray  # (n_blocks, block, kv_heads, hd)
+    v: jnp.ndarray
+
+
+def init_paged_kv_cache(cfg, n_blocks: int, block: int, dtype) -> PagedKVCache:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_blocks, block, K, hd)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode_paged(p: dict, x: jnp.ndarray, pool: PagedKVCache,
+                           tables: jnp.ndarray, pos: jnp.ndarray,
+                           cfg) -> tuple[jnp.ndarray, PagedKVCache]:
+    """One decode step against a paged block pool.
+
+    x: (b, 1, d_model); tables: (b, W) int32 block tables; pos: (b,) int32
+    per-slot absolute positions — unlike ``attention_decode``, every batch
+    slot sits at its *own* position (continuous batching).  This step's
+    K/V are scattered into block ``tables[b, pos//block]`` at row offset
+    ``pos % block``; the time-ordered cache view is gathered through the
+    same block-table lookup the planner prices (``ops.kv_block_gather``)
+    and attended with per-row validity masks (``idx <= pos``, plus the
+    sliding window on absolute positions for windowed archs — the pool is
+    time-ordered, so no ring reconstruction is needed).
+    """
+    blk = pool.k.shape[1]
+    W = tables.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[:, None])
+    blk_ids = jnp.take_along_axis(tables, (pos // blk)[:, None], axis=1)[:, 0]
+    off = pos % blk
+    # slots own disjoint blocks (block 0 = shared scratch for idle slots)
+    k_pool = pool.k.at[blk_ids, off].set(k_new[:, 0])
+    v_pool = pool.v.at[blk_ids, off].set(v_new[:, 0])
+
+    kh = ops.kv_block_gather(k_pool, tables, W * blk)   # (b, kv, t, d)
+    vh = ops.kv_block_gather(v_pool, tables, W * blk)
+    qh = q.transpose(0, 2, 1, 3)                        # (b, h, 1, hd)
+
+    idx = jnp.arange(W * blk)
+    valid = idx[None, :] <= pos[:, None]
+    if cfg.window:
+        valid &= idx[None, :] > (pos[:, None] - cfg.window)
+
+    o = _decode_attend(qh, kh, vh, valid, cfg)
+    o = o.transpose(0, 2, 1, 3)
+    out = jnp.einsum("bshd,hda->bsa", o, p["wo"])
+    return out, PagedKVCache(k_pool, v_pool)
+
+
 def _decode_attend(q, k, v, valid, cfg):
-    """Masked attention for a single query against the whole cache buffer."""
+    """Masked attention for a single query against the whole cache buffer.
+    ``valid`` is (S,) shared across the batch, or (b, S) per-row (the paged
+    decode path, where every slot sits at its own position)."""
     hq, hkv = q.shape[1], k.shape[1]
     g = hq // hkv
     b, _, S, d = k.shape
     qs = q.reshape(b, hkv, g, 1, d).astype(jnp.float32) * (d ** -0.5)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qs, k.astype(jnp.float32))
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    mask = (valid[:, None, None, None, :] if valid.ndim == 2
+            else valid[None, None, None, None, :])
+    s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1, keepdims=True)

@@ -40,7 +40,8 @@ from repro.models.policy import ShardingPolicy, policy_from_plan
 
 
 def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
-                     decode: bool = False, kv_len: int = 0) -> ein.Expr:
+                     decode: bool = False, kv_len: int = 0,
+                     kv_block: int = 0) -> ein.Expr:
     """q/k/v are declared in the kernel's (batch, heads, seq, head_dim)
     layout, so the opaque node's sequence label *is* the kernel's sequence
     axis — what the ring shard rule rotates K/V blocks over.  Everything
@@ -53,8 +54,26 @@ def _attention_nodes(x: ein.Expr, cfg, B: int, S: int, *,
     wq = ein.tensor("wq", "a h d", (D, H, hd))
     q = ein.einsum("b s a, a h d -> b h s d", x, wq, name="q_proj")
     if decode:
-        kc = ein.tensor("k_cache", "b k t d", (B, K, kv_len, hd))
-        vc = ein.tensor("v_cache", "b k t d", (B, K, kv_len, hd))
+        if kv_block:
+            # paged serving-tier decode: the cache arrives as a block pool
+            # plus per-sequence block tables, and the time-ordered (b k t d)
+            # view is a kv_block_gather node — an OpDef like any other, so
+            # the DP prices the lookup and the shard_map executor lowers it
+            # through the ``paged`` rule (zero-collective local gather).
+            W = -(-kv_len // kv_block)
+            t_len = W * kv_block
+            kp = ein.tensor("kv_pool_k", "n p k d",
+                            (B * W + 1, kv_block, K, hd))
+            vp = ein.tensor("kv_pool_v", "n p k d",
+                            (B * W + 1, kv_block, K, hd))
+            tb = ein.tensor("block_tables", "b w", (B, W), dtype="int32")
+            kc = ein.opaque("kv_block_gather", [kp, tb], name="kv_gather_k",
+                            kv_len=t_len)
+            vc = ein.opaque("kv_block_gather", [vp, tb], name="kv_gather_v",
+                            kv_len=t_len)
+        else:
+            kc = ein.tensor("k_cache", "b k t d", (B, K, kv_len, hd))
+            vc = ein.tensor("v_cache", "b k t d", (B, K, kv_len, hd))
         att = ein.opaque(
             "flash_attention", [q, kc, vc],
             in_labels=[("b", "h", "s", "d"), ("b", "k", "t", "d"),
@@ -143,18 +162,27 @@ def _recurrent_nodes(x: ein.Expr, cfg, B: int, S: int, kind: str) -> ein.Expr:
 # ---------------------------------------------------------------------------
 
 
-def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
+def build_expr(cfg, shape, *, mode: str | None = None,
+               kv_block: int = 0) -> ein.Expr:
     """Embedding -> one block period -> LM head, at the cell's (B, S),
     declared as one symbolic expression (the logits).
 
     One period is enough: scan reuses the same plan for every unit (the
     per-layer graphs are isomorphic), which is also why the DP stays fast.
+
+    ``kv_block`` > 0 declares the decode KV cache as a *paged* block pool +
+    block tables feeding ``kv_block_gather`` nodes (the serving tier's
+    cache; block size ``kv_block``) instead of dense (b k t d) inputs.
     """
     mode = mode or ("decode" if shape.kind == "decode" else shape.kind)
     B = shape.batch
     S = 1 if mode == "decode" else shape.seq
     D, V = cfg.d_model, cfg.vocab_padded
-    kv_len = cfg.kv_len(shape) if mode == "decode" else 0
+    kv_len = 0
+    if mode == "decode":
+        # paged caches are time-ordered (window masking happens at the
+        # attend), so their span is the full sequence, not the ring window
+        kv_len = shape.seq if kv_block else cfg.kv_len(shape)
 
     ids = ein.tensor("ids", "b s", (B, S), dtype="int32")
     table = ein.tensor("embed", "v a", (V, D))
@@ -163,7 +191,7 @@ def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
     for blk in cfg.block_pattern:
         if blk == "attn":
             a = _attention_nodes(x, cfg, B, S, decode=(mode == "decode"),
-                                 kv_len=kv_len)
+                                 kv_len=kv_len, kv_block=kv_block)
             x = ein.einsum("b s a, b s a -> b s a", x, a, combine="add",
                            agg="", name="resid_attn")
             m = (_moe_nodes(x, cfg, B, S) if cfg.moe
@@ -172,7 +200,7 @@ def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
                            agg="", name="resid_ffn")
         elif blk == "hymba":
             a = _attention_nodes(x, cfg, B, S, decode=(mode == "decode"),
-                                 kv_len=kv_len)
+                                 kv_len=kv_len, kv_block=kv_block)
             sm = _recurrent_nodes(x, cfg, B, S, "ssm")
             mix = ein.einsum("b s a, b s a -> b s a", a, sm, combine="add",
                              agg="", name="hymba_mix")
@@ -192,26 +220,30 @@ def build_expr(cfg, shape, *, mode: str | None = None) -> ein.Expr:
     return ein.einsum("b s a, a v -> b s v", x, head, name="lm_head")
 
 
-def _build_program(cfg, shape, *, mode: str | None = None) -> Program:
+def _build_program(cfg, shape, *, mode: str | None = None,
+                   kv_block: int = 0) -> Program:
     mode_str = mode or ("decode" if shape.kind == "decode" else shape.kind)
-    logits = build_expr(cfg, shape, mode=mode)
+    logits = build_expr(cfg, shape, mode=mode, kv_block=kv_block)
+    paged = f":paged{kv_block}" if kv_block else ""
     return Program({"logits": logits},
-                   name=f"{cfg.name}:{shape.name}:{mode_str}")
+                   name=f"{cfg.name}:{shape.name}:{mode_str}{paged}")
 
 
 @functools.lru_cache(maxsize=None)
-def _program_cached(cfg, shape) -> Program:
-    return _build_program(cfg, shape)
+def _program_cached(cfg, shape, kv_block: int = 0) -> Program:
+    return _build_program(cfg, shape, kv_block=kv_block)
 
 
-def program_for(cfg, shape, *, mode: str | None = None) -> Program:
+def program_for(cfg, shape, *, mode: str | None = None,
+                kv_block: int = 0) -> Program:
     """The declarative surface for one (arch x shape) cell: a ``Program``
     with name-keyed inputs and a ``logits`` output.  Memoized per (cfg,
-    shape) for the default mode — programs (and their traced graphs) are
-    immutable after construction."""
+    shape, kv_block) for the default mode — programs (and their traced
+    graphs) are immutable after construction.  ``kv_block`` > 0 declares
+    the decode KV cache as a paged block pool (see ``build_expr``)."""
     if mode is None:
-        return _program_cached(cfg, shape)
-    return _build_program(cfg, shape, mode=mode)
+        return _program_cached(cfg, shape, kv_block)
+    return _build_program(cfg, shape, mode=mode, kv_block=kv_block)
 
 
 def fsdp_axes_for(mesh_axes: dict[str, int]) -> tuple[str, ...]:

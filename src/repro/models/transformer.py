@@ -211,10 +211,14 @@ def _embed_tokens(params, tokens, prefix_embeds, cfg, policy, mesh):
 
 def forward(params, tokens, cfg, *, prefix_embeds=None, policy=None,
             mesh=None, collect_cache: bool = False, remat: bool | None = None,
-            unroll: bool = False, last_logit_only: bool = False):
+            unroll: bool = False, last_logit_only: bool = False,
+            logit_index=None):
     """Full-sequence forward.  Returns (logits, caches, aux_loss).
     ``last_logit_only`` computes the LM head for the final position only
-    (prefill serving: (b,s,v) logits are never needed — §Perf)."""
+    (prefill serving: (b,s,v) logits are never needed — §Perf).
+    ``logit_index`` (a scalar, may be traced) generalizes it to *any*
+    single position — bucketed serving prefill pads the prompt to the
+    bucket length and takes the logit at the last real token."""
     x = _embed_tokens(params, tokens, prefix_embeds, cfg, policy, mesh)
     pattern = cfg.block_pattern
     remat = (policy.remat if policy is not None else True) if remat is None else remat
@@ -244,6 +248,8 @@ def forward(params, tokens, cfg, *, prefix_embeds=None, policy=None,
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if last_logit_only:
         x = x[:, -1:]
+    elif logit_index is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
     head = params.get("head")
     if head is None:
         head = params["embed"].T
@@ -346,6 +352,111 @@ def decode_step(params, tokens, caches, pos, cfg, *, policy=None, mesh=None,
         for ppos, blk in enumerate(pattern):
             x, c2 = _block_decode(blk, unit_params[ppos], x, unit_caches[ppos],
                                   pos, cfg, policy, mesh)
+            new_caches.append(c2)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        unit, x, (tuple(params["layers"]), tuple(caches)),
+        unroll=True if unroll else 1)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = lm_logits(x, head)
+    logits = _cst(logits, "b s v", policy, mesh)
+    return logits, list(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (the serving tier): block-pool KV caches + per-slot positions
+# ---------------------------------------------------------------------------
+
+
+def init_paged_caches(cfg, batch: int, n_blocks: int, block: int, *,
+                      abstract: bool = False):
+    """Per-pattern-position stacked (units, ...) paged decode caches.
+
+    Attention blocks hold a ``PagedKVCache`` pool of ``n_blocks`` blocks x
+    ``block`` rows (shared by all batch slots through block tables) instead
+    of the dense per-slot (b, S, k, d) buffer; recurrent states are
+    unchanged (per-slot already, so ``batch`` sizes only those)."""
+    dt = dtype_of(cfg)
+    units = cfg.n_layers // len(cfg.block_pattern)
+
+    def one(blk):
+        if blk == "attn":
+            return attn_mod.init_paged_kv_cache(cfg, n_blocks, block, dt)
+        if blk == "hymba":
+            return (attn_mod.init_paged_kv_cache(cfg, n_blocks, block, dt),
+                    ssm_mod.init_ssm_state(cfg, batch, dt))
+        if blk == "mlstm":
+            return xlstm_mod.init_mlstm_state(cfg, batch)
+        if blk == "slstm":
+            return xlstm_mod.init_slstm_state(cfg, batch)
+        raise ValueError(blk)
+
+    def build():
+        return [_stack([one(blk) for _ in range(units)])
+                for blk in cfg.block_pattern]
+
+    if abstract:
+        return jax.eval_shape(build)
+    return build()
+
+
+def _block_decode_paged(blk: str, p: dict, x, cache, tables, pos, cfg,
+                        policy, mesh):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if blk == "attn":
+        a_out, cache2 = attn_mod.attention_decode_paged(
+            p["attn"], h, cache, tables, pos, cfg)
+        x = x + a_out
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe:
+            m_out, _ = moe_mod.moe_ffn(p["moe"], h2, cfg, policy=policy,
+                                       mesh=mesh)
+        else:
+            m_out = ffn_mod.ffn(p["ffn"], h2, cfg)
+        x = x + m_out
+    elif blk == "hymba":
+        kv, st = cache
+        a_out, kv2 = attn_mod.attention_decode_paged(
+            p["attn"], h, kv, tables, pos, cfg)
+        s_out, st2 = ssm_mod.ssm_decode(p["ssm"], h, st, cfg)
+        mixed = 0.5 * (rmsnorm(a_out, p["norm_a"], cfg.norm_eps)
+                       + rmsnorm(s_out, p["norm_s"], cfg.norm_eps))
+        x = x + mixed
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.ffn(p["ffn"], h2, cfg)
+        cache2 = (kv2, st2)
+    elif blk == "mlstm":
+        out, cache2 = xlstm_mod.mlstm_decode(p["mlstm"], h, cache, cfg)
+        x = x + out
+    elif blk == "slstm":
+        out, cache2 = xlstm_mod.slstm_decode(p["slstm"], h, cache, cfg)
+        x = x + out
+    else:
+        raise ValueError(blk)
+    return x, cache2
+
+
+def decode_step_paged(params, tokens, caches, tables, pos, cfg, *,
+                      policy=None, mesh=None, unroll: bool = False):
+    """One continuous-batching decode step.  tokens (b, 1); tables (b, W)
+    int32 block tables; pos (b,) int32 per-slot positions.  Returns
+    (logits (b, 1, v), new caches).  Idle slots point their table rows at
+    the scratch block 0 and carry pos such that their writes land there."""
+    x = embed(params["embed"], tokens).astype(dtype_of(cfg))
+    x = _cst(x, "b s a", policy, mesh)
+    pattern = cfg.block_pattern
+
+    def unit(x, scanned):
+        unit_params, unit_caches = scanned
+        new_caches = []
+        for ppos, blk in enumerate(pattern):
+            x, c2 = _block_decode_paged(
+                blk, unit_params[ppos], x, unit_caches[ppos], tables, pos,
+                cfg, policy, mesh)
             new_caches.append(c2)
         return x, tuple(new_caches)
 

@@ -1,0 +1,159 @@
+"""Shape-bucket registry: one live compiled handle per serving shape cell.
+
+Continuous batching wants to admit arbitrary-length prompts without
+recompiling per length.  The registry quantizes prompt lengths into
+buckets and keeps exactly one ``CompiledProgram`` (plus its projected
+``ShardingPolicy`` and jitted step function) per
+``(arch, kind, bucket_len, batch[, kv_block])`` cell, resolved through
+the canonical plan cache — the *second* process (or the second bucket
+that is structurally isomorphic) skips the §8 DP entirely and only pays
+XLA compilation.
+
+Bucket policy: pure-attention, non-MoE archs round prompt lengths up to a
+power of two (pad tokens sit behind the causal mask, so real positions
+are unaffected); recurrent archs (ssm/xlstm blocks) and MoE archs get
+exact-length buckets — a recurrent scan folds pad tokens into its final
+state and MoE capacity couples rows, so padding would change real
+outputs, not just waste FLOPs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ShapeConfig
+from repro.core.plancache import PlanCache
+from repro.launch import steps
+from repro.launch.mesh import mesh_axes_dict
+from repro.models.eingraphs import program_for
+
+
+def pad_free(cfg) -> bool:
+    """True iff right-padding a prompt cannot change real-token outputs:
+    every block is causal attention (pad keys are masked) and routing does
+    not couple rows (no MoE)."""
+    return all(b == "attn" for b in cfg.block_pattern) and not cfg.moe
+
+
+def bucket_len(cfg, prompt_len: int, *, mode: str = "auto",
+               min_bucket: int = 8) -> int:
+    """Quantized prefill length for ``prompt_len`` under the policy."""
+    if mode not in ("auto", "pow2", "exact"):
+        raise ValueError(f"bucket mode {mode!r}")
+    if mode == "exact" or (mode == "auto" and not pad_free(cfg)):
+        return int(prompt_len)
+    return max(min_bucket, 1 << (int(prompt_len) - 1).bit_length())
+
+
+@dataclass
+class BucketEntry:
+    """One shape cell's live handle: the planned program, its policy
+    projection, and the jitted step function serving requests."""
+
+    key: tuple
+    canonical_key: str
+    compiled: Any
+    policy: Any
+    step: Callable
+    plan_time_s: float
+    cache_hit: bool
+    hits: int = 0
+
+
+@dataclass
+class RegistryStats:
+    compiles: int = 0
+    lookups: int = 0
+    plan_cache_hits: int = 0
+    plan_time_s: float = 0.0
+
+
+class BucketRegistry:
+    """Per-(arch, shape-cell) compiled-handle cache over the plan cache."""
+
+    def __init__(self, cfg, mesh, *, plan_cache=None, executor: str = "gspmd",
+                 bucket: str = "auto", min_bucket: int = 8):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.executor = executor
+        self.bucket = bucket
+        self.min_bucket = min_bucket
+        coerced = PlanCache.coerce(plan_cache)
+        # explicit None test: an empty PlanCache is falsy (len 0), and a
+        # caller-shared cache must not be silently replaced
+        self.plan_cache = PlanCache() if coerced is None else coerced
+        self.stats = RegistryStats()
+        self._entries: dict[tuple, BucketEntry] = {}
+
+    # -- shape-cell resolution ------------------------------------------------
+
+    def bucket_len(self, prompt_len: int) -> int:
+        return bucket_len(self.cfg, prompt_len, mode=self.bucket,
+                          min_bucket=self.min_bucket)
+
+    def prefill(self, prompt_len: int, batch: int = 1) -> BucketEntry:
+        """The prefill cell covering ``prompt_len`` (bucketed)."""
+        seq = self.bucket_len(prompt_len)
+        return self._get("prefill", seq, batch, 0)
+
+    def decode(self, seq: int, batch: int, kv_block: int) -> BucketEntry:
+        """The persistent paged-decode cell for a batch bucket."""
+        if seq % kv_block:
+            raise ValueError(f"decode seq {seq} not a multiple of the "
+                             f"kv block {kv_block}")
+        return self._get("decode", seq, batch, kv_block)
+
+    # -- internals ------------------------------------------------------------
+
+    def _get(self, kind: str, seq: int, batch: int,
+             kv_block: int) -> BucketEntry:
+        self.stats.lookups += 1
+        key = (self.cfg.name, kind, seq, batch, kv_block)
+        ent = self._entries.get(key)
+        if ent is not None:
+            ent.hits += 1
+            return ent
+
+        shape = ShapeConfig("serve", kind, seq, batch)
+        prog = program_for(self.cfg, shape, kv_block=kv_block)
+        h0, m0 = self.plan_cache.hits, self.plan_cache.misses
+        t0 = time.time()
+        compiled = prog.compile(mesh_axes=mesh_axes_dict(self.mesh),
+                                cache=self.plan_cache,
+                                mesh=(self.mesh if self.executor == "shard_map"
+                                      else None),
+                                executor=self.executor)
+        plan_t = time.time() - t0
+        hit = (self.plan_cache.hits > h0 and self.plan_cache.misses == m0)
+        policy = compiled.policy()
+        step = self._make_step(kind, policy)
+        ent = BucketEntry(key=key, canonical_key=compiled.canonical_key,
+                          compiled=compiled, policy=policy, step=step,
+                          plan_time_s=plan_t, cache_hit=hit)
+        self._entries[key] = ent
+        self.stats.compiles += 1
+        self.stats.plan_time_s += plan_t
+        if hit:
+            self.stats.plan_cache_hits += 1
+        return ent
+
+    def _make_step(self, kind: str, policy) -> Callable:
+        cfg, mesh = self.cfg, self.mesh
+        if kind == "prefill":
+            return jax.jit(steps.make_bucket_prefill_step(
+                cfg, policy=policy, mesh=mesh))
+        base = steps.make_paged_serve_step(cfg, policy=policy, mesh=mesh)
+
+        def decode_step(params, tokens, caches, tables, pos):
+            import jax.numpy as jnp
+
+            logits, caches = base(params, tokens, caches, tables, pos)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            return tok, caches
+
+        # donate the caches: the pool is the dominant buffer and strictly
+        # carried step-to-step
+        return jax.jit(decode_step, donate_argnums=(2,))

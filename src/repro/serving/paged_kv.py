@@ -1,0 +1,124 @@
+"""Paged KV-cache plumbing for the serving tier.
+
+Device side, the pool is ``models.attention.PagedKVCache`` — ``n_blocks``
+blocks of ``block`` cache rows shared by every decode slot — and the
+per-step lookup is the ``kv_block_gather`` OpDef, so the planner prices it
+and the shard_map executor lowers it like any other op.  This module owns
+the *host* side: a free-list block allocator, and the jitted admission
+scatter that moves a bucketed prefill's collected caches into the pool
+under a slot's block table.
+
+Block 0 is reserved as scratch: idle slots keep all-zero table rows, so
+their (masked, never-read) decode writes land there instead of in live
+blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import PagedKVCache
+
+
+class BlockAllocator:
+    """Free-list allocator over pool blocks 1..n_blocks-1 (0 = scratch).
+
+    ``alloc(n)`` hands out ``n`` block ids or ``None`` if the pool cannot
+    satisfy the request (admission then waits for an eviction — all-or-
+    nothing keeps table rows contiguous-by-request and deadlock analysis
+    trivial).  ``release`` returns a request's blocks at eviction.
+    """
+
+    def __init__(self, n_blocks: int, block: int):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is scratch)")
+        self.n_blocks = int(n_blocks)
+        self.block = int(block)
+        # pop() from the tail -> ids hand out in 1, 2, 3, ... order
+        self._free = list(range(self.n_blocks - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def release(self, blocks: list[int]) -> None:
+        live = set(self._free)
+        for b in blocks:
+            if not 0 < b < self.n_blocks or b in live:
+                raise ValueError(f"release: bad/double-freed block {b}")
+        self._free.extend(blocks)
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` cache rows."""
+        return -(-int(tokens) // self.block)
+
+
+def _scatter_kv(pool: PagedKVCache, k, v, blocks) -> PagedKVCache:
+    """Write a prefill KV cache (L, 1, s, kh, hd) into a stacked pool
+    (L, N, blk, kh, hd) under table row ``blocks`` (W,).
+
+    The source is padded/truncated to the full W*blk rows: rows past the
+    prompt land either in the slot's own not-yet-reached blocks (decode
+    overwrites row ``pos`` before any mask admits it) or — where the table
+    row is 0-padded — in the scratch block.  Fixed W keeps the jit shape
+    stable across prompt lengths within a bucket.
+    """
+    blk = pool.k.shape[2]
+    W = blocks.shape[0]
+
+    def prep(x):
+        x = x[:, 0]                         # (L, s, kh, hd)
+        L, s, kh, hd = x.shape
+        rows = W * blk
+        if s < rows:
+            x = jnp.pad(x, ((0, 0), (0, rows - s), (0, 0), (0, 0)))
+        else:
+            x = x[:, :rows]
+        return x.reshape(L, W, blk, kh, hd)
+
+    return PagedKVCache(pool.k.at[:, blocks].set(prep(k)),
+                        pool.v.at[:, blocks].set(prep(v)))
+
+
+def _set_slot(state, src, slot):
+    """Insert a batch-1 prefill state tree into row ``slot`` of the stacked
+    decode state tree (leaves (L, b, ...) <- (L, 1, ...))."""
+    return jax.tree.map(lambda d, s: d.at[:, slot].set(s[:, 0]), state, src)
+
+
+def make_admit_fn(cfg):
+    """Jitted admission: scatter one request's prefill caches into the
+    paged decode caches and seed its first token.
+
+    Signature: ``admit(caches, pre_caches, blocks, slot, tok0, tokens) ->
+    (caches, tokens)`` with ``blocks`` the (W,) int32 table row, ``slot``
+    a traced scalar, ``tok0`` the prefill argmax (1,) int32.  Donates the
+    caches (pure in-place update on device); the token buffer is NOT
+    donated — the engine's step log aliases it.
+    """
+    pattern = cfg.block_pattern
+
+    def admit(caches, pre_caches, blocks, slot, tok0, tokens):
+        new = []
+        for i, blk_kind in enumerate(pattern):
+            cache, pre = caches[i], pre_caches[i]
+            if blk_kind == "attn":
+                k, v = pre
+                new.append(_scatter_kv(cache, k, v, blocks))
+            elif blk_kind == "hymba":
+                (k, v), st_pre = pre
+                pool, st = cache
+                new.append((_scatter_kv(pool, k, v, blocks),
+                            _set_slot(st, st_pre, slot)))
+            else:  # mlstm / slstm: per-slot recurrent state rows
+                new.append(_set_slot(cache, pre, slot))
+        tokens = tokens.at[slot, 0].set(tok0[0])
+        return new, tokens
+
+    return jax.jit(admit, donate_argnums=(0,))
