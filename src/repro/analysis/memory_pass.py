@@ -1,0 +1,140 @@
+"""Memory pass (RA3xx): peak per-device live bytes, statically.
+
+Deinsum (arxiv 2206.08301) derives distributed memory footprints from the
+einsum spec alone; this pass does the same from (graph, plan, schedule):
+every buffer's per-device block shape is ``local_shape(shape, layout,
+sizes)``, liveness follows topo order (producer → last consumer; inputs
+and outputs are program-lifetime, matching XLA's argument/output
+accounting; donated inputs die after their last read), and repartition
+chains add their largest replay copy as transient working space.  The
+result is the deliberate first brick of ROADMAP's memory-aware planning:
+``--max-hbm`` turns the report into a hard bound (RA301/RA302).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.einsum import EinGraph
+from repro.core.spmd import Schedule, local_shape
+
+from repro.analysis.findings import Finding
+from repro.analysis.schedule_pass import _replay_chain
+
+
+def _itemsize(dtype) -> int:
+    try:
+        return np.dtype(dtype).itemsize
+    except TypeError:
+        return 4
+
+
+def analyze_memory(g: EinGraph, sched: Schedule, out_ids=None,
+                   donate: Sequence[str] = (), max_hbm: int | None = None
+                   ) -> tuple[list[Finding], dict]:
+    """Returns (findings, report).  The report dict carries the numbers the
+    acceptance test compares against jax's ``compiled.memory_analysis()``:
+    ``args_bytes`` / ``out_bytes`` / ``peak_bytes`` are all per-device."""
+    findings: list[Finding] = []
+    sizes = sched.sizes
+    consumers = g.consumers()
+    out_set = set(out_ids) if out_ids is not None else set(g.outputs())
+    donated = {n.nid for n in g.nodes
+               if n.kind == "input" and n.name in set(donate)}
+    n_pos = len(g.nodes)
+
+    def bytes_of(nid: int, shape=None) -> int:
+        n = g.nodes[nid]
+        try:
+            loc = shape if shape is not None else \
+                local_shape(n.shape, sched.layouts.get(nid, ()), sizes)
+        except (ValueError, KeyError):
+            loc = n.shape  # unrealizable layout: RA203 already flagged it
+        return math.prod(loc) * _itemsize(n.dtype) if loc else \
+            _itemsize(n.dtype)
+
+    # lifetime [birth, death] in topo positions, inclusive ----------------
+    buf_bytes: dict[int, int] = {}
+    birth: dict[int, int] = {}
+    death: dict[int, int] = {}
+    for n in g.nodes:
+        buf_bytes[n.nid] = bytes_of(n.nid)
+        last = max(consumers.get(n.nid, []), default=n.nid)
+        if n.kind == "input":
+            # arguments are held for the whole program (XLA accounts the
+            # full argument size) — unless donated, which frees/aliases
+            # the buffer after its last read
+            birth[n.nid] = 0
+            death[n.nid] = last if n.nid in donated else n_pos - 1
+        else:
+            birth[n.nid] = n.nid
+            death[n.nid] = n_pos - 1 if n.nid in out_set else last
+
+    # transient repartition copies: while node t executes, each gathered /
+    # re-bucketed argument occupies its largest replay shape next to the
+    # resident buffers
+    transient: dict[int, int] = {}
+    for prog in sched.programs:
+        n = g.nodes[prog.nid]
+        extra = 0
+        for a, steps in zip(n.inputs, prog.arg_steps):
+            if not steps:
+                continue
+            try:
+                shape = local_shape(g.nodes[a].shape,
+                                    sched.layouts.get(a, ()), sizes)
+            except (ValueError, KeyError):
+                continue
+            peak = math.prod(shape) if shape else 1
+            s = list(shape)
+            for st in steps:
+                nxt, err = _replay_chain(tuple(s), [st], sizes)
+                if err or nxt is None:
+                    break
+                s = list(nxt)
+                peak = max(peak, math.prod(s) if s else 1)
+            extra += peak * _itemsize(g.nodes[a].dtype)
+        if extra:
+            transient[prog.nid] = extra
+
+    # peak over topo positions --------------------------------------------
+    peak_bytes = 0
+    peak_pos = 0
+    for t in range(n_pos):
+        live = sum(b for nid, b in buf_bytes.items()
+                   if birth[nid] <= t <= death[nid])
+        live += transient.get(t, 0)
+        if live > peak_bytes:
+            peak_bytes, peak_pos = live, t
+
+    args_bytes = sum(buf_bytes[n.nid] for n in g.nodes if n.kind == "input")
+    out_bytes = sum(buf_bytes[nid] for nid in out_set)
+    top = sorted(buf_bytes.items(), key=lambda kv: -kv[1])[:8]
+    report = {
+        "peak_bytes": int(peak_bytes),
+        "peak_pos": int(peak_pos),
+        "args_bytes": int(args_bytes),
+        "out_bytes": int(out_bytes),
+        "n_buffers": len(buf_bytes),
+        "top_buffers": [{"nid": nid, "name": g.nodes[nid].name,
+                         "bytes": int(b)} for nid, b in top],
+    }
+
+    if max_hbm is not None:
+        for nid, b in top:
+            if b > max_hbm:
+                n = g.nodes[nid]
+                findings.append(Finding(
+                    "RA302", f"buffer {n.name!r} alone is {b:,} B per "
+                             f"device, over --max-hbm {int(max_hbm):,} B",
+                    nid=nid, node=n.name, srcloc=n.srcloc))
+        if peak_bytes > max_hbm:
+            n = g.nodes[peak_pos]
+            findings.append(Finding(
+                "RA301", f"peak live bytes {peak_bytes:,} B per device "
+                         f"(at node {peak_pos}, {n.name}) exceed "
+                         f"--max-hbm {int(max_hbm):,} B",
+                nid=peak_pos, node=n.name, srcloc=n.srcloc))
+    return findings, report

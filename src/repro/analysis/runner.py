@@ -1,0 +1,113 @@
+"""Run the analysis passes over a graph / plan / schedule — backend-free.
+
+The entry points never build a jax array or touch a device: planning
+(``decomp.eindecomp``) and schedule lowering (``spmd.build_schedule``) are
+pure Python over static shapes (the discipline the existing
+"planning never initializes the jax backend" subprocess test pins), so the
+full pipeline — graph → plan → schedule → memory — runs on any host.
+
+``analyze_compiled`` is the post-compile convenience: it re-analyzes what
+a ``CompiledProgram`` is actually going to execute (its plan, mesh, and
+donation set) and is what the launch/serving hooks call.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.core.decomp import Plan, eindecomp
+from repro.core.einsum import EinGraph
+
+from repro.analysis.findings import Finding, Report
+from repro.analysis.graph_pass import analyze_graph
+from repro.analysis.memory_pass import analyze_memory
+from repro.analysis.plan_pass import analyze_plan
+from repro.analysis.schedule_pass import analyze_schedule
+
+
+def analyze(g: EinGraph, plan: Plan | None = None,
+            mesh_axes: dict[str, int] | None = None,
+            out_ids: Sequence[int] | None = None,
+            donate: Sequence[str] = (), max_hbm: int | None = None,
+            fuse: bool = True, meta: dict | None = None) -> Report:
+    """All applicable passes over one cell.
+
+    Graph pass always runs; the plan pass needs ``plan``; the schedule and
+    memory passes need ``plan`` + ``mesh_axes`` (they analyze the exact
+    static schedule ``build_schedule`` lowers for that pair).
+    """
+    report = Report(meta=dict(meta or {}))
+    outs = list(out_ids) if out_ids is not None else g.outputs()
+    report.extend(analyze_graph(g, outs))
+
+    if plan is not None:
+        report.extend(analyze_plan(g, plan, mesh_axes))
+
+    if plan is not None and mesh_axes is not None:
+        from repro.core.spmd import build_schedule
+
+        try:
+            sched = build_schedule(g, plan, dict(mesh_axes), outs, fuse=fuse)
+        except Exception as e:  # broken plans fail lowering, not the CLI
+            report.add(Finding(
+                "RA203", f"schedule lowering failed: "
+                         f"{type(e).__name__}: {e}"))
+            return report
+        report.extend(analyze_schedule(g, plan, sched, outs, donate))
+        mem_findings, mem_report = analyze_memory(g, sched, outs, donate,
+                                                  max_hbm)
+        report.extend(mem_findings)
+        report.memory = mem_report
+    return report
+
+
+def analyze_schedule_only(g: EinGraph, sched, out_ids=None,
+                          donate: Sequence[str] = (),
+                          max_hbm: int | None = None,
+                          meta: dict | None = None) -> Report:
+    """Schedule + memory passes over an already-built (possibly
+    hand-constructed) Schedule — the corpus fixtures' entry point."""
+    report = Report(meta=dict(meta or {}))
+    outs = list(out_ids) if out_ids is not None else g.outputs()
+    report.extend(analyze_schedule(g, None, sched, outs, donate))
+    mem_findings, mem_report = analyze_memory(g, sched, outs, donate,
+                                              max_hbm)
+    report.extend(mem_findings)
+    report.memory = mem_report
+    return report
+
+
+def analyze_program(program, mesh_axes: dict[str, int],
+                    plan: Plan | None = None, donate: Sequence[str] = (),
+                    max_hbm: int | None = None, fuse: bool = True,
+                    meta: dict | None = None) -> Report:
+    """Analyze a frontend ``Program`` under a mesh shape, planning with the
+    §7 DP when no plan is supplied (both steps are backend-free)."""
+    g = program.graph
+    out_ids = [program._out[k] for k in program._out]
+    if plan is None:
+        p = math.prod(int(s) for s in mesh_axes.values()) if mesh_axes else 1
+        plan = eindecomp(g, p, mesh_axes=dict(mesh_axes))
+    return analyze(g, plan, dict(mesh_axes), out_ids, donate, max_hbm,
+                   fuse, meta)
+
+
+def analyze_compiled(compiled, max_hbm: int | None = None,
+                     meta: dict | None = None,
+                     mesh_axes: dict[str, int] | None = None) -> Report:
+    """Re-verify what a ``CompiledProgram`` will execute: its own plan,
+    mesh, and donation set (the launch / serving hooks' surface).
+
+    ``mesh_axes`` is only needed for programs compiled with
+    ``mesh_axes=`` but no jax ``Mesh`` (the gspmd executor): the plan is
+    mesh-mode but the compiled object has no mesh to read sizes from."""
+    from repro.core.engine import mesh_axes_dict
+
+    program = compiled.program
+    if mesh_axes is None and compiled.mesh is not None:
+        mesh_axes = mesh_axes_dict(compiled.mesh)
+    donate = tuple(compiled._in_names[i] for i in compiled.donate_argnums)
+    g = program.graph
+    out_ids = [program._out[k] for k in program._out]
+    return analyze(g, compiled.plan, mesh_axes, out_ids, donate, max_hbm,
+                   fuse=True, meta=meta)

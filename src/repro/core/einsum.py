@@ -90,23 +90,42 @@ class EinSpec:
     combine: str = "mul"
     agg: str = "sum"  # "" means elementwise (no aggregation)
 
+    def _spec_str(self) -> str:
+        """The offending spec rendered as a parseable string — included in
+        every validation error so messages are self-locating (and, with the
+        sorted lists below, byte-deterministic across runs)."""
+        ins = ", ".join(" ".join(ls) for ls in self.in_labels)
+        return f"'{ins} -> {' '.join(self.out_labels)}'"
+
     def __post_init__(self):
         if len(self.in_labels) not in (1, 2):
-            raise ValueError("EinSpec supports unary and binary expressions")
+            raise ValueError(
+                f"EinSpec {self._spec_str()}: supports unary and binary "
+                "expressions only")
         for ls in self.in_labels:
             if len(set(ls)) != len(ls):
-                raise ValueError(f"repeated label within one input: {ls}")
+                raise ValueError(
+                    f"EinSpec {self._spec_str()}: repeated label within one "
+                    f"input: {ls}")
         if self.agg and self.agg not in AGGS:
-            raise ValueError(f"aggregation {self.agg!r} not in {AGGS}")
+            raise ValueError(
+                f"EinSpec {self._spec_str()}: aggregation {self.agg!r} not "
+                f"in {AGGS}")
         reg = COMBINE2 if len(self.in_labels) == 2 else COMBINE1
         if self.combine not in reg:
-            raise ValueError(f"combine {self.combine!r} not registered")
+            raise ValueError(
+                f"EinSpec {self._spec_str()}: combine {self.combine!r} not "
+                "registered")
         known = set(self.all_labels)
         for l in self.out_labels:
             if l not in known:
-                raise ValueError(f"broadcast output label {l!r} unsupported (§3: no broadcasts)")
+                raise ValueError(
+                    f"EinSpec {self._spec_str()}: broadcast output label "
+                    f"{l!r} unsupported (§3: no broadcasts)")
         if not self.agg and self.agg_labels:
-            raise ValueError(f"labels {self.agg_labels} aggregated but agg=''")
+            raise ValueError(
+                f"EinSpec {self._spec_str()}: labels {self.agg_labels} "
+                "aggregated but agg=''")
 
     # ℓ_XY with duplicates removed in order of first appearance (the ⊙ of §4)
     @property
@@ -199,6 +218,12 @@ class Node:
     shardable: frozenset[str] | None = None
     # For opaque nodes: labels of each input, for repartition reasoning.
     in_labels: tuple[tuple[str, ...], ...] = ()
+    # "file.py:line" of the frontend expression that built this node ("" for
+    # imperatively-built graphs).  Diagnostics only: canonical hashing
+    # (canon.node_struct) enumerates hashed fields explicitly and never
+    # sees it, so identical programs traced from different files share plan
+    # cache entries.
+    srcloc: str = ""
 
     @property
     def rank(self) -> int:
@@ -371,8 +396,8 @@ def resolve_feeds(g: EinGraph, feeds: dict) -> dict[int, Any]:
             out[by_name[k]] = v
         else:
             out[int(k)] = v
-    missing = [n.name for n in g.nodes
-               if n.kind == "input" and n.nid not in out]
+    missing = sorted(n.name for n in g.nodes
+                     if n.kind == "input" and n.nid not in out)
     if missing:
         raise ValueError(f"missing feeds for inputs {missing}")
     return out

@@ -402,10 +402,11 @@ class RingAttentionRule:
             n_dev = _prod(sizes.values())
             n_loc = _prod(_spmd.local_shape(kn.shape, kv_layout, sizes))
             item = _itemsize(kn.dtype)
+            ring_perm = tuple((i, (i + 1) % r) for i in range(r))
             for _step in range(r - 1):
                 for _tensor in range(2):  # k and v each take the ring hop
                     events.append(("ppermute", tuple(ra), n_dev * n_loc,
-                                   n_dev * n_loc * item, db))
+                                   n_dev * n_loc * item, db, ring_perm))
 
         def run(args):
             import jax.numpy as jnp

@@ -91,6 +91,10 @@ class OpDef:
     fn: Callable | None = None
     kernel: Callable | None = None
     vjp: Any = None                      # None | "auto" | callable(gg, node, dz)
+    # why vjp is (deliberately) None — required by the OpDef-completeness
+    # lint (tests/test_analysis.py) for any op that is neither
+    # differentiable via vjp nor, for maps, via a grad link
+    vjp_reason: str | None = None
     grad: str | None = None              # map category: derivative map kind
     comm: tuple[dict, ...] = ()          # template over signature labels
     shard_rule: str | None = None
@@ -271,7 +275,7 @@ def _check_impl_shape(od: OpDef) -> None:
 
 def defop(kind: str, signature: str | None = None, *,
           fn: Callable | None = None, kernel: Callable | None = None,
-          vjp=None, grad: str | None = None,
+          vjp=None, vjp_reason: str | None = None, grad: str | None = None,
           comm: Sequence[Mapping] = (), shard_rule: str | None = None,
           shardable=None, param_bounds: Mapping[str, str] | None = None,
           out_dtype=None, in_dtypes: Sequence = (),
@@ -353,7 +357,8 @@ def defop(kind: str, signature: str | None = None, *,
 
     od = OpDef(kind=kind, category=category, signature=signature,
                in_labels=in_labels, out_labels=out_labels, fn=fn,
-               kernel=kernel, vjp=vjp, grad=grad, comm=comm_t,
+               kernel=kernel, vjp=vjp, vjp_reason=vjp_reason, grad=grad,
+               comm=comm_t,
                shard_rule=shard_rule, shardable=shardable_set,
                param_bounds=dict(param_bounds or {}), out_dtype=out_dtype,
                in_dtypes=tuple(in_dtypes), implicit=implicit)

@@ -86,9 +86,15 @@ _DERIV_MAPS = {
 # opdef.check_impl over every builtin instead.
 # derivative helpers first: defop validates grad= links eagerly
 for _kind, _fn in _DERIV_MAPS.items():
-    defop(_kind, None, fn=_fn, category="map")
+    defop(_kind, None, fn=_fn, category="map",
+          vjp_reason="derivative helper map — appears only in backward "
+                     "graphs and is never itself differentiated")
 for _kind, (_fn, _grad) in _MAPS.items():
-    defop(_kind, None, fn=_fn, grad=_grad, category="map")
+    defop(_kind, None, fn=_fn, grad=_grad, category="map",
+          vjp_reason=None if _grad is not None else
+          "softmax Jacobian is not diagonal, so no derivative map exists; "
+          "grad_graph rejects it and models differentiate the explicit "
+          "exp/sum einsum form instead")
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +202,9 @@ def _broadcast(x, src_labels, out_labels, out_shape):
 
 defop("broadcast_to", None,
       fn=lambda x, labels=(), shape=(), src_labels=(): (
-          _broadcast(jnp.asarray(x), src_labels, labels, shape)))
+          _broadcast(jnp.asarray(x), src_labels, labels, shape)),
+      vjp_reason="autodiff adjoint carrier — only ever *emitted by* the "
+                 "backward pass, never differentiated through")
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +216,8 @@ defop("broadcast_to", None,
 
 defop(
     "moe_dispatch", "b s a, b s e -> e c a",
+    vjp_reason="discrete top-1 routing has no meaningful cotangent; MoE "
+               "training backward is future work (ROADMAP)",
     shardable="e c b s", param_bounds={"c": "capacity"},
     comm=[{"kind": "a2a", "label": "e", "input": 0},
           {"kind": "a2a", "label": "c", "input": 0}],
@@ -215,6 +225,8 @@ defop(
 
 defop(
     "moe_combine", "e c a, b s e -> b s a",
+    vjp_reason="discrete top-1 routing has no meaningful cotangent; MoE "
+               "training backward is future work (ROADMAP)",
     shardable="e c b s",
     # the moved buffer is the token-sided *output* (input -1): combine
     # returns each token its expert's result, it never moves the full

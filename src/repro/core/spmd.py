@@ -74,6 +74,11 @@ class CollectiveEvent:
     rule: str = ""           # shard rule that emitted it ("" = einsum path)
     fused: bool = False      # emitted by the fused repartition planner
     overlap: bool = False    # issued to overlap with local compute
+    # ppermute only: the exact (src, dst) pairs the executor will issue over
+    # the flattened device group — the static analyzer's bijectivity check
+    # (repro.analysis RA201) runs over this, so it verifies the permutation
+    # that actually executes, not a re-derivation.
+    perm: tuple = ()
 
 
 class CollectiveTrace:
@@ -100,10 +105,11 @@ class CollectiveTrace:
 
     def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
             nbytes: int, rule: str = "", *, fused: bool = False,
-            overlap: bool = False) -> None:
+            overlap: bool = False, perm: Sequence = ()) -> None:
         self.events.append(CollectiveEvent(kind, tuple(axes), nid,
                                            int(elems), int(nbytes), rule,
-                                           fused, overlap))
+                                           fused, overlap,
+                                           tuple(tuple(p) for p in perm)))
 
     def extend(self, other: "CollectiveTrace") -> None:
         self.events.extend(other.events)
@@ -590,10 +596,17 @@ def _record_steps(trace: CollectiveTrace, steps: list[tuple],
     for st in steps:
         kind = st[0]
         if kind in WIRE_KINDS:
+            perm: tuple = ()
             if kind in ("psum", "pmax", "pmin"):
                 axes = tuple(st[1])
             elif kind == "ppermute":
                 axes = (st[1], st[2])
+                # mirror the executor's transpose formula exactly (the
+                # run-time closure below) so the static analyzer verifies
+                # the permutation that actually ships
+                k = sizes[st[1]]
+                perm = tuple((j * k + i, i * k + j)
+                             for i in range(k) for j in range(k))
             elif kind == "psum_scatter_grouped":
                 axes = tuple(ax for ax, _ in st[1])
             else:
@@ -601,7 +614,7 @@ def _record_steps(trace: CollectiveTrace, steps: list[tuple],
             elems = _wire_elems(st, shape, sizes, n_devices)
             rec = "psum_scatter" if kind == "psum_scatter_grouped" else kind
             trace.add(rec, axes, nid, elems, elems * itemsize, rule,
-                      fused=fused)
+                      fused=fused, perm=perm)
         shape = _step_shape(shape, st, sizes)
     return shape
 
@@ -736,11 +749,14 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
         assert got == want_shape, (nid, a, got, want_shape)
     for ev in low.events:
         # rules may tag an event as overlapped (5th element) — the ring's
-        # double-buffered K/V hops issued alongside local compute
+        # double-buffered K/V hops issued alongside local compute — and
+        # expose the exact ppermute (src, dst) pairs (6th element) for the
+        # static bijectivity check
         kind, axes, elems, nbytes = ev[:4]
         overlap = bool(ev[4]) if len(ev) > 4 else False
+        perm = tuple(ev[5]) if len(ev) > 5 else ()
         trace.add(kind, axes, nid, elems, nbytes, rule_name,
-                  overlap=overlap)
+                  overlap=overlap, perm=perm)
     prog.post_steps = list(low.post_steps)
     prog.layout = low.out_layout
     # rule post steps are layout-conforming local slices (free, no wire

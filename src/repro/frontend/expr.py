@@ -26,6 +26,8 @@ entries — are identical across the two surfaces.
 from __future__ import annotations
 
 import itertools
+import os
+import sys
 from typing import Any, Iterable, Sequence
 
 import numpy as np
@@ -33,6 +35,23 @@ import numpy as np
 from repro.core.einsum import EinGraph, EinSpec, parse_einsum, _as_labels
 
 _UID = itertools.count()
+
+_FRONTEND_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _caller_srcloc() -> str:
+    """``"path/to/file.py:line"`` of the first stack frame *outside* this
+    package — the user (or model-zoo) line that built the expression.  The
+    static analyzer (``repro.analysis``) reports findings at these
+    locations; canonical graph hashing never sees them (``canon.node_struct``
+    enumerates hashed Node fields explicitly)."""
+    f = sys._getframe(1)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if os.path.dirname(os.path.abspath(fn)) != _FRONTEND_DIR:
+            return f"{fn}:{f.f_lineno}"
+        f = f.f_back
+    return ""
 
 
 class Expr:
@@ -44,7 +63,7 @@ class Expr:
     """
 
     __slots__ = ("uid", "kind", "name", "labels", "shape", "dtype", "args",
-                 "spec", "op", "params", "shardable", "in_labels")
+                 "spec", "op", "params", "shardable", "in_labels", "srcloc")
 
     def __init__(self, kind: str, labels: tuple[str, ...],
                  shape: tuple[int, ...], dtype: Any, *,
@@ -65,6 +84,7 @@ class Expr:
         self.params = dict(params or {})
         self.shardable = shardable
         self.in_labels = tuple(tuple(ls) for ls in in_labels)
+        self.srcloc = _caller_srcloc()
 
     # -- structure -----------------------------------------------------------
 
@@ -367,5 +387,6 @@ def trace(outputs: Sequence[Expr], name: str = "program"
             nid = g.opaque(e.op, [ids[a] for a in e.args], e.labels, e.shape,
                            in_labels=e.in_labels, shardable=e.shardable,
                            dtype=e.dtype, name=e.name, **e.params)
+        g.nodes[nid].srcloc = e.srcloc
         ids[e] = nid
     return g, ids

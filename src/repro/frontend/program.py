@@ -300,7 +300,7 @@ class CompiledProgram:
         if unknown:
             raise KeyError(f"unknown inputs {unknown}; "
                            f"program inputs are {sorted(self._in_names)}")
-        missing = [n for n in self._in_names if n not in feeds]
+        missing = sorted(n for n in self._in_names if n not in feeds)
         if missing:
             raise ValueError(f"missing feeds for inputs {missing}")
         outs = self._fn(*[feeds[n] for n in self._in_names])

@@ -224,6 +224,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["compile_s"] = round(time.time() - t0, 1)
     if plan is not None:
         rec["plan_cost_floats"] = plan.cost
+        rec["analysis"] = _static_analysis(cfg, shape, mesh, plan)
     rec["policy"] = {k: list(v) for k, v in policy.label_axes.items()}
     rec["fsdp"] = list(policy.fsdp_axes)
 
@@ -300,6 +301,27 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         with open(os.path.join(out_dir, fn), "w") as f:
             json.dump(rec, f, indent=1)
     return rec
+
+
+def _static_analysis(cfg, shape, mesh, plan) -> dict:
+    """Record the repro.analysis verdict for the planned cell next to the
+    XLA numbers: the static verifier re-checks the exact plan the dry-run
+    proved compilable (graph/plan/schedule/memory passes, backend-free).
+    Informational — findings land in the artifact, they don't fail the
+    sweep (RA regressions are gated by CI's `analysis` job on the zoo)."""
+    from repro.analysis import analyze_program
+    from repro.launch.mesh import mesh_axes_dict
+    from repro.models.eingraphs import program_for
+
+    try:
+        report = analyze_program(program_for(cfg, shape),
+                                 mesh_axes_dict(mesh), plan=plan)
+    except Exception as e:  # never let verification sink the dry-run
+        return {"error": f"{type(e).__name__}: {e}"}
+    return {"n_errors": len(report.errors),
+            "n_warnings": len(report.warnings),
+            "codes": sorted(report.codes()),
+            "peak_bytes_per_dev": report.memory.get("peak_bytes")}
 
 
 def _plan_only(cfg, shape, mesh, fsdp, policy_override):

@@ -140,6 +140,24 @@ class BucketRegistry:
             self.stats.plan_cache_hits += 1
         return ent
 
+    # -- static verification --------------------------------------------------
+
+    def analyze(self, max_hbm: int | None = None) -> dict:
+        """Statically re-verify every live bucket cell (repro.analysis):
+        each entry's CompiledProgram is checked with its own plan and
+        donation set under this registry's mesh shape — graph, plan,
+        schedule, and memory passes, all backend-free, so it is safe to
+        call on a loaded serving host.  Returns ``{bucket key: Report}``;
+        callers gate on ``report.has_errors``."""
+        from repro.analysis import analyze_compiled
+
+        axes = mesh_axes_dict(self.mesh)
+        return {
+            key: analyze_compiled(
+                ent.compiled, max_hbm=max_hbm, mesh_axes=axes,
+                meta={"bucket": "/".join(str(k) for k in key)})
+            for key, ent in sorted(self._entries.items())}
+
     def _make_step(self, kind: str, policy) -> Callable:
         cfg, mesh = self.cfg, self.mesh
         if kind == "prefill":

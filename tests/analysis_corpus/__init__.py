@@ -1,0 +1,27 @@
+"""Known-bad corpus for repro.analysis (ISSUE 8, satellite 1).
+
+Each module builds ONE deliberately broken artifact — a graph, a plan, or
+a hand-constructed Schedule — and exposes:
+
+    EXPECT : str       the RA code the analyzer must raise (as an error)
+    report() -> Report the analysis run over the fixture
+
+The twin property (tests/test_analysis.py) is that the *entire model zoo*
+analyzes clean while every fixture here trips its code: the corpus pins
+the analyzer's sensitivity, the zoo pins its specificity.
+"""
+from tests.analysis_corpus import (bound_mismatched_opaque, cyclic_donation,
+                                   nonbijective_ppermute, over_hbm,
+                                   over_rotated_ring, stale_cost,
+                                   unregistered_kind)
+
+#: name -> fixture module; tests iterate this registry
+FIXTURES = {
+    "cyclic_donation": cyclic_donation,
+    "nonbijective_ppermute": nonbijective_ppermute,
+    "bound_mismatched_opaque": bound_mismatched_opaque,
+    "over_hbm": over_hbm,
+    "over_rotated_ring": over_rotated_ring,
+    "stale_cost": stale_cost,
+    "unregistered_kind": unregistered_kind,
+}

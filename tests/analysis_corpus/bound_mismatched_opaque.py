@@ -1,0 +1,20 @@
+"""Opaque node whose declared out_shape contradicts its OpDef (RA004).
+
+``EinGraph.opaque`` is a raw constructor — it records whatever shape the
+caller claims without consulting the registry (only the ein.* frontend
+binds through ``opdef.bind_call``).  Here ``mlstm_scan`` (signature
+``'b s f -> b s f'``) is given an output bound f=32 while its input has
+f=16; the graph pass re-binds the signature and must flag the lie.
+"""
+from repro.analysis import analyze
+from repro.core.einsum import EinGraph
+
+EXPECT = "RA004"
+
+
+def report():
+    g = EinGraph("bound_mismatched_opaque")
+    x = g.input("x", "bsf", (4, 8, 16))
+    g.opaque("mlstm_scan", [x], "bsf", (4, 8, 32),
+             in_labels=[("b", "s", "f")], name="scan")
+    return analyze(g)

@@ -1,0 +1,21 @@
+"""Donated input read again after its aliasing step (RA202).
+
+``x`` is donated to the jit runner, but its buffer feeds both ``h``
+(the aliasing step — after it runs, the donation may have been
+overwritten in place) and the later einsum, which would then read
+garbage.  The schedule pass must refuse the donation cycle.
+"""
+from repro.analysis import analyze
+from repro.core.decomp import eindecomp
+from repro.core.einsum import EinGraph
+
+EXPECT = "RA202"
+
+
+def report():
+    g = EinGraph("cyclic_donation")
+    x = g.input("x", "a", (8,))
+    h = g.map("relu", x, name="h")
+    g.einsum("a, a -> a", x, h, name="out")
+    plan = eindecomp(g, 2, mesh_axes={"data": 2})
+    return analyze(g, plan, {"data": 2}, donate=("x",))

@@ -1,0 +1,31 @@
+"""Hand-built schedule whose ppermute is not a bijection (RA201).
+
+Two source devices target device 1 (shards collide: data loss) and no
+one targets device 2 — the executor would deadlock waiting for a send
+that never comes.  Built directly as a Schedule because build_schedule
+can never emit this; the pass guards *deserialized or hand-edited*
+schedules.
+"""
+from repro.analysis import analyze_schedule_only
+from repro.core.einsum import EinGraph
+from repro.core.spmd import CollectiveTrace, NodeProgram, Schedule
+
+EXPECT = "RA201"
+
+
+def report():
+    g = EinGraph("nonbijective_ppermute")
+    x = g.input("x", "a", (8,))
+    y = g.map("relu", x, name="y")
+    trace = CollectiveTrace()
+    # 4-device group, but dsts = (1, 1, 3, 0): device 1 receives twice,
+    # device 2 never receives
+    trace.add("ppermute", ("model",), y, 16, 64, rule="ring",
+              perm=((0, 1), (1, 1), (2, 3), (3, 0)))
+    sched = Schedule(
+        programs=[NodeProgram(y, arg_steps=[[]], layout=((),))],
+        layouts={x: ((),), y: ((),)},
+        trace=trace,
+        sizes={"model": 4},
+    )
+    return analyze_schedule_only(g, sched)

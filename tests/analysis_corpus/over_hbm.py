@@ -1,0 +1,21 @@
+"""Plan whose per-device peak footprint exceeds the HBM bound (RA301).
+
+A perfectly valid graph/plan/schedule — the only problem is physical:
+with ``--max-hbm 64`` the per-device live set cannot fit.  RA302 also
+fires (single buffers alone exceed the bound); the memory pass must at
+minimum report the peak violation.
+"""
+from repro.analysis import analyze
+from repro.core.decomp import eindecomp
+from repro.core.einsum import EinGraph
+
+EXPECT = "RA301"
+
+
+def report():
+    g = EinGraph("over_hbm")
+    a = g.input("a", "ij", (8, 8))
+    b = g.input("b", "jk", (8, 8))
+    g.einsum("ij, jk -> ik", a, b, name="mm")
+    plan = eindecomp(g, 2, mesh_axes={"data": 2})
+    return analyze(g, plan, {"data": 2}, max_hbm=64)

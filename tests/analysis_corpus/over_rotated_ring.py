@@ -1,0 +1,31 @@
+"""Ring schedule with more overlapped hops than the ring has steps (RA204).
+
+On an r-device ring each circulating tensor needs exactly r-1 rotations;
+a third hop on a 2-device ring hands every device data it already saw —
+wasted wire and a latent off-by-one in the double-buffer loop.  Built by
+hand (build_schedule always emits exactly r-1 per tensor).
+"""
+from repro.analysis import analyze_schedule_only
+from repro.core.einsum import EinGraph
+from repro.core.spmd import CollectiveTrace, NodeProgram, Schedule
+
+EXPECT = "RA204"
+
+
+def report():
+    g = EinGraph("over_rotated_ring")
+    x = g.input("x", "a", (8,))
+    y = g.map("relu", x, name="y")
+    trace = CollectiveTrace()
+    perm = ((0, 1), (1, 0))  # valid 2-device rotation — bijective
+    for _hop in range(3):  # limit on a 2-device ring is 1 per tensor
+        trace.add("ppermute", ("model",), y, 4, 16, rule="ring",
+                  overlap=True, perm=perm)
+    trace.rule_by_node[y] = "ring"
+    sched = Schedule(
+        programs=[NodeProgram(y, arg_steps=[[]], layout=((),))],
+        layouts={x: ((),), y: ((),)},
+        trace=trace,
+        sizes={"model": 2},
+    )
+    return analyze_schedule_only(g, sched)

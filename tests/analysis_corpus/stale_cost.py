@@ -1,0 +1,24 @@
+"""Plan whose recorded cost no longer matches plan_cost(g, plan) (RA107).
+
+A plan edited (or deserialized from a stale cache entry) after pricing
+silently breaks the cost-honesty contract the benches assert — the DP's
+argmin claim is about the *recorded* cost.  The plan pass reprices and
+compares.
+"""
+import dataclasses
+
+from repro.analysis import analyze
+from repro.core.decomp import eindecomp
+from repro.core.einsum import EinGraph
+
+EXPECT = "RA107"
+
+
+def report():
+    g = EinGraph("stale_cost")
+    a = g.input("a", "ij", (8, 8))
+    b = g.input("b", "jk", (8, 8))
+    g.einsum("ij, jk -> ik", a, b, name="mm")
+    plan = eindecomp(g, 2, mesh_axes={"data": 2})
+    stale = dataclasses.replace(plan, cost=plan.cost + 12345)
+    return analyze(g, stale)  # plan pass only — no mesh, no schedule

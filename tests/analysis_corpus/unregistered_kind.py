@@ -1,0 +1,18 @@
+"""Opaque node whose kind exists in no OpDef registry (RA005).
+
+The graph would fail at execution time with a KeyError deep inside the
+engine; the graph pass surfaces it at analysis time with the node's
+source location instead.
+"""
+from repro.analysis import analyze
+from repro.core.einsum import EinGraph
+
+EXPECT = "RA005"
+
+
+def report():
+    g = EinGraph("unregistered_kind")
+    x = g.input("x", "a", (8,))
+    g.opaque("totally_unknown_op", [x], "a", (8,),
+             in_labels=[("a",)], name="mystery")
+    return analyze(g)

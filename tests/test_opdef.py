@@ -350,7 +350,8 @@ def test_no_private_registry_use_outside_core():
     goes through the OpDef API."""
     src = Path(__file__).resolve().parent.parent / "src" / "repro"
     banned = re.compile(
-        r"OPAQUE_FNS|MAP_FNS|GRAD_MAPS|opaque_rules\.RULES|RULES\[")
+        r"OPAQUE_FNS|MAP_FNS|GRAD_MAPS|opaque_rules\.RULES|RULES\["
+        r"|opdef\._REGISTRY")
     offenders = []
     for path in src.rglob("*.py"):
         if (src / "core") in path.parents:
