@@ -43,9 +43,15 @@ is recomputed from the paper-mode plan and the static schedule
 ``tests/test_spmd_fastpath.py`` pins.
 
 The shard_map runner is compiled with ``donate=True`` (every input buffer
-donated via ``jax.jit(donate_argnums=...)``) and the fused repartition
-planner on — ``--check`` additionally asserts the fused schedule moves no
-more wire elems than the unfused PR-3 lowering.
+donated via ``jax.jit(donate_argnums=...)``), the fused repartition
+planner on, and the default graph-wide ``lookahead=1`` overlap window —
+``--check`` additionally asserts the fused schedule moves no more wire
+elems than the unfused PR-3 lowering, that every family's executed
+schedule overlaps some wire (``overlap_frac > 0``), and that the
+lookahead schedule's logits are bit-identical to a ``lookahead=0`` serial
+twin compiled from the same cached plan.  The per-family ``overlap_frac``
+and exposed-wire rows land in BENCH_spmd.json next to the ratio
+trajectory (both deterministic: static schedule, no devices).
 
 Usage:
   PYTHONPATH=src python benchmarks/bench_spmd.py [--check] [--reps 5]
@@ -136,6 +142,10 @@ def bench_cell(arch: str, reps: int, check: bool,
     run_g = prog.compile(mesh=mesh, cache=cache)
     run_s = prog.compile(mesh=mesh, cache=cache,
                          executor="shard_map", donate=True)
+    # serial twin: identical plan, lookahead=0 — the graph-wide overlap
+    # pass must be a pure issue-order rewrite (bit-identical logits)
+    run_s0 = prog.compile(mesh=mesh, cache=cache, executor="shard_map",
+                          lookahead=0)
     assert run_s.plan.d_by_node == run_g.plan.d_by_node
     predicted = plan_cost(g, run_s.plan)
     traced = run_s.collectives
@@ -148,6 +158,9 @@ def bench_cell(arch: str, reps: int, check: bool,
     t_s, outs_s = _time(run_s, feeds, reps)
     max_diff = float(np.abs(np.asarray(outs_g["logits"])
                             - np.asarray(outs_s["logits"])).max())
+    logits_s0 = np.asarray(run_s0(feeds)["logits"])
+    bitwise_vs_serial = bool(
+        np.array_equal(np.asarray(outs_s["logits"]), logits_s0))
 
     # calibrated time price of the traced schedule: sum over collective
     # kinds of (traced wire elems) x (measured ns per wire elem) — how much
@@ -179,6 +192,10 @@ def bench_cell(arch: str, reps: int, check: bool,
         "unfused_elems": int(unfused),
         "fused_event_elems": traced.fused_elems,
         "overlapped_elems": traced.overlapped_elems,
+        "prefetched_elems": traced.prefetched_elems,
+        "overlap_frac": round(traced.overlapped_elems
+                              / max(traced.total_elems, 1), 4),
+        "bitwise_vs_serial": bitwise_vs_serial,
         "donated_args": len(run_s.donate_argnums),
         "collectives": dict(traced.counts),
         "by_rule": traced.by_rule(),
@@ -193,6 +210,8 @@ def bench_cell(arch: str, reps: int, check: bool,
           f"predicted={predicted:>12,} traced={traced.total_elems:>12,} "
           f"({'OK' if row['within_bound'] else 'OVER'}) "
           f"unfused={unfused:>12,} "
+          f"overlap={row['overlap_frac']:.4f} "
+          f"serial={'==' if bitwise_vs_serial else '!='} "
           f"gspmd={row['t_gspmd_ms']:8.2f}ms "
           f"shard_map={row['t_shard_map_ms']:8.2f}ms "
           f"diff={max_diff:.2e}", flush=True)
@@ -217,6 +236,17 @@ def bench_cell(arch: str, reps: int, check: bool,
             f"more than the unfused lowering's {unfused:,} — "
             "plan_repart_best must pick the min")
         assert max_diff < 2e-3, f"{arch}: executors diverge ({max_diff})"
+        assert bitwise_vs_serial, (
+            f"{arch}: lookahead schedule is not bit-identical to its "
+            "lookahead=0 serial twin — the hoist pass changed more than "
+            "the issue order")
+        assert row["overlap_frac"] > 0, (
+            f"{arch}: no overlapped wire in the executed schedule — the "
+            "graph-wide lookahead pass hoisted nothing")
+        assert run_s0.collectives.total_elems == traced.total_elems, (
+            f"{arch}: lookahead changed traced wire volume "
+            f"({traced.total_elems:,} vs serial "
+            f"{run_s0.collectives.total_elems:,})")
         for o in opaques:
             if o["rule"] in ("ring", "a2a", "local"):
                 assert o["traced_elems"] <= o["bound_elems"], (
@@ -328,11 +358,17 @@ def _ratio_rows() -> list[dict]:
     out = []
     for r in family_ratios():
         print(f"RATIOROW {r['arch']:14s} predicted={r['predicted_elems']:>12,} "
-              f"traced={r['traced_elems']:>12,} ratio={r['ratio']:.4f}",
-              flush=True)
+              f"traced={r['traced_elems']:>12,} ratio={r['ratio']:.4f} "
+              f"overlap_frac={r['overlap_frac']:.4f}", flush=True)
         out.append({"name": f"spmd/{r['arch']}/ratio",
                     "metric": "predicted_over_traced",
                     "value": r["ratio"], "unit": "ratio"})
+        out.append({"name": f"spmd/{r['arch']}/overlap_frac",
+                    "metric": "overlapped_over_traced",
+                    "value": r["overlap_frac"], "unit": "ratio"})
+        out.append({"name": f"spmd/{r['arch']}/exposed", "metric":
+                    "wire_elems", "value": r["exposed_elems"],
+                    "unit": "elems"})
     return out
 
 

@@ -76,6 +76,9 @@ def main(argv=None) -> int:
                     help="per-device HBM bound in bytes (RA301/RA302)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="analyze the unfused repartition lowering")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="graph-wide overlap window (0 = serial issue "
+                         "order; default 1, the executor default)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write the full report to this path")
     ap.add_argument("--list-codes", action="store_true",
@@ -107,7 +110,7 @@ def main(argv=None) -> int:
             prog = _cell_program(family, mode)
             report = analyze_program(
                 prog, dict(args.mesh), max_hbm=args.max_hbm,
-                fuse=not args.no_fuse,
+                fuse=not args.no_fuse, lookahead=args.lookahead,
                 meta={"family": family, "mode": mode,
                       "mesh": ",".join(f"{k}={v}"
                                        for k, v in args.mesh.items())})

@@ -68,6 +68,9 @@ CODES: dict[str, tuple[str, str]] = {
     "RA206": (ERROR, "program's traced wire elems exceed the §7 "
                      "plan_cost the DP optimized"),
     "RA207": (WARNING, "dead donation: donated input is never read"),
+    "RA208": (ERROR, "prefetch hazard: hoisted issue precedes a producer's "
+                     "compute, aliases another prefetch's buffer, or is "
+                     "unrecorded in the schedule's lifetimes"),
     # memory pass ---------------------------------------------------------
     "RA301": (ERROR, "peak per-device live bytes exceed --max-hbm"),
     "RA302": (ERROR, "a single buffer alone exceeds --max-hbm"),

@@ -6,9 +6,12 @@ every buffer's per-device block shape is ``local_shape(shape, layout,
 sizes)``, liveness follows topo order (producer → last consumer; inputs
 and outputs are program-lifetime, matching XLA's argument/output
 accounting; donated inputs die after their last read), and repartition
-chains add their largest replay copy as transient working space.  The
-result is the deliberate first brick of ROADMAP's memory-aware planning:
-``--max-hbm`` turns the report into a hard bound (RA301/RA302).
+chains add their largest replay copy as transient working space — at the
+consumer for serial chains, at the hoisted issue point for lookahead
+prefetches, whose landed shards additionally stay live until the consumer
+reads them.  The result is the deliberate first brick of ROADMAP's
+memory-aware planning: ``--max-hbm`` turns the report into a hard bound
+(RA301/RA302).
 """
 from __future__ import annotations
 
@@ -74,12 +77,18 @@ def analyze_memory(g: EinGraph, sched: Schedule, out_ids=None,
 
     # transient repartition copies: while node t executes, each gathered /
     # re-bucketed argument occupies its largest replay shape next to the
-    # resident buffers
-    transient: dict[int, int] = {}
+    # resident buffers.  A *prefetched* argument (graph-wide lookahead)
+    # widens that lifetime: the chain replays — and peaks — at its hoisted
+    # issue position, and the landed shard stays live from there until the
+    # consumer reads it, so its final bytes are charged over the whole
+    # (issue, consumer] window.
+    pf_issue = {(pf.consumer, pf.arg): pf.issue
+                for pf in getattr(sched, "prefetches", ()) or ()}
+    extra = [0] * n_pos
+    prefetch_hold_bytes = 0
     for prog in sched.programs:
         n = g.nodes[prog.nid]
-        extra = 0
-        for a, steps in zip(n.inputs, prog.arg_steps):
+        for ai, (a, steps) in enumerate(zip(n.inputs, prog.arg_steps)):
             if not steps:
                 continue
             try:
@@ -95,9 +104,17 @@ def analyze_memory(g: EinGraph, sched: Schedule, out_ids=None,
                     break
                 s = list(nxt)
                 peak = max(peak, math.prod(s) if s else 1)
-            extra += peak * _itemsize(g.nodes[a].dtype)
-        if extra:
-            transient[prog.nid] = extra
+            item = _itemsize(g.nodes[a].dtype)
+            issue = pf_issue.get((prog.nid, ai), prog.nid)
+            if not 0 <= issue < prog.nid:
+                issue = prog.nid  # malformed lifetime: RA208's domain —
+                #                   fall back to the serial charge
+            extra[issue] += peak * item
+            if issue < prog.nid:
+                final = (math.prod(s) if s else 1) * item
+                prefetch_hold_bytes += final
+                for t in range(issue + 1, prog.nid + 1):
+                    extra[t] += final
 
     # peak over topo positions --------------------------------------------
     peak_bytes = 0
@@ -105,7 +122,7 @@ def analyze_memory(g: EinGraph, sched: Schedule, out_ids=None,
     for t in range(n_pos):
         live = sum(b for nid, b in buf_bytes.items()
                    if birth[nid] <= t <= death[nid])
-        live += transient.get(t, 0)
+        live += extra[t]
         if live > peak_bytes:
             peak_bytes, peak_pos = live, t
 
@@ -118,6 +135,8 @@ def analyze_memory(g: EinGraph, sched: Schedule, out_ids=None,
         "args_bytes": int(args_bytes),
         "out_bytes": int(out_bytes),
         "n_buffers": len(buf_bytes),
+        "n_prefetches": len(pf_issue),
+        "prefetch_hold_bytes": int(prefetch_hold_bytes),
         "top_buffers": [{"nid": nid, "name": g.nodes[nid].name,
                          "bytes": int(b)} for nid, b in top],
     }

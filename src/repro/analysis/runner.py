@@ -29,12 +29,15 @@ def analyze(g: EinGraph, plan: Plan | None = None,
             mesh_axes: dict[str, int] | None = None,
             out_ids: Sequence[int] | None = None,
             donate: Sequence[str] = (), max_hbm: int | None = None,
-            fuse: bool = True, meta: dict | None = None) -> Report:
+            fuse: bool = True, lookahead: int = 1,
+            meta: dict | None = None) -> Report:
     """All applicable passes over one cell.
 
     Graph pass always runs; the plan pass needs ``plan``; the schedule and
     memory passes need ``plan`` + ``mesh_axes`` (they analyze the exact
-    static schedule ``build_schedule`` lowers for that pair).
+    static schedule ``build_schedule`` lowers for that pair — including
+    the graph-wide ``lookahead`` prefetch hoisting, so the memory pass
+    charges prefetch buffers exactly where the executor holds them).
     """
     report = Report(meta=dict(meta or {}))
     outs = list(out_ids) if out_ids is not None else g.outputs()
@@ -47,7 +50,8 @@ def analyze(g: EinGraph, plan: Plan | None = None,
         from repro.core.spmd import build_schedule
 
         try:
-            sched = build_schedule(g, plan, dict(mesh_axes), outs, fuse=fuse)
+            sched = build_schedule(g, plan, dict(mesh_axes), outs, fuse=fuse,
+                                   lookahead=lookahead)
         except Exception as e:  # broken plans fail lowering, not the CLI
             report.add(Finding(
                 "RA203", f"schedule lowering failed: "
@@ -80,7 +84,7 @@ def analyze_schedule_only(g: EinGraph, sched, out_ids=None,
 def analyze_program(program, mesh_axes: dict[str, int],
                     plan: Plan | None = None, donate: Sequence[str] = (),
                     max_hbm: int | None = None, fuse: bool = True,
-                    meta: dict | None = None) -> Report:
+                    lookahead: int = 1, meta: dict | None = None) -> Report:
     """Analyze a frontend ``Program`` under a mesh shape, planning with the
     §7 DP when no plan is supplied (both steps are backend-free)."""
     g = program.graph
@@ -89,7 +93,7 @@ def analyze_program(program, mesh_axes: dict[str, int],
         p = math.prod(int(s) for s in mesh_axes.values()) if mesh_axes else 1
         plan = eindecomp(g, p, mesh_axes=dict(mesh_axes))
     return analyze(g, plan, dict(mesh_axes), out_ids, donate, max_hbm,
-                   fuse, meta)
+                   fuse, lookahead, meta)
 
 
 def analyze_compiled(compiled, max_hbm: int | None = None,
@@ -110,4 +114,5 @@ def analyze_compiled(compiled, max_hbm: int | None = None,
     g = program.graph
     out_ids = [program._out[k] for k in program._out]
     return analyze(g, compiled.plan, mesh_axes, out_ids, donate, max_hbm,
-                   fuse=True, meta=meta)
+                   fuse=True, lookahead=getattr(compiled, "lookahead", 1),
+                   meta=meta)

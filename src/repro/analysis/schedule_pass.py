@@ -166,9 +166,12 @@ def analyze_schedule(g: EinGraph, plan: Plan | None, sched: Schedule,
         # itself asserts their evolution at lowering time
 
     # RA204: double-buffer overlap hazards ---------------------------------
+    # (graph-wide lookahead prefetches also ride the overlap mark but are
+    # attributed via prefetch_for and audited by RA208 below — the ring
+    # rule's per-hop accounting must not see them)
     overlap_by_node: dict[int, int] = {}
     for e in trace.events:
-        if not e.overlap:
+        if not e.overlap or e.prefetch_for >= 0:
             continue
         n = g.nodes[e.nid]
         if not e.rule:
@@ -196,6 +199,73 @@ def analyze_schedule(g: EinGraph, plan: Plan | None, sched: Schedule,
                          f"{len(ring_entries)} circulating tensors on a "
                          f"{r}-device ring (limit {limit}) — the last "
                          "rotation returns data already seen", n))
+
+    # RA208: lookahead prefetch hazards ------------------------------------
+    # A hoisted issue is only safe when the consumer's argument is already
+    # producible at the issue point: its producer's compute (topo position
+    # == nid) must precede the issue node's iteration.  Two lifetimes for
+    # one (consumer, arg) would alias one prefetch buffer — the runner's
+    # keyed dict holds exactly one value per slot.  And every
+    # prefetch_for-marked event must be covered by a recorded lifetime,
+    # else the memory pass cannot charge the buffer it implies.
+    prefetches = list(getattr(sched, "prefetches", ()) or ())
+    seen_slots: set[tuple[int, int]] = set()
+    recorded_consumers: set[int] = set()
+    for pf in prefetches:
+        if not 0 <= pf.consumer < len(g.nodes):
+            findings.append(Finding(
+                "RA208", f"prefetch names consumer node {pf.consumer}, "
+                         "which does not exist"))
+            continue
+        n = g.nodes[pf.consumer]
+        recorded_consumers.add(pf.consumer)
+        if not 0 <= pf.arg < len(n.inputs):
+            findings.append(_f(
+                "RA208", f"prefetch arg index {pf.arg} out of range for "
+                         f"{len(n.inputs)} inputs", n))
+            continue
+        if (pf.consumer, pf.arg) in seen_slots:
+            findings.append(_f(
+                "RA208", f"two prefetches alias arg {pf.arg}'s buffer — "
+                         "the second overwrites the first before its "
+                         "consumer reads it", n))
+        seen_slots.add((pf.consumer, pf.arg))
+        if pf.issue >= pf.consumer:
+            findings.append(_f(
+                "RA208", f"prefetch of arg {pf.arg} issues at node "
+                         f"{pf.issue}, not before its consumer "
+                         f"{pf.consumer} — nothing is hoisted", n))
+            continue
+        if not 0 <= pf.issue < len(g.nodes):
+            findings.append(_f(
+                "RA208", f"prefetch of arg {pf.arg} issues at node "
+                         f"{pf.issue}, which does not exist", n))
+            continue
+        if g.nodes[pf.issue].kind == "input":
+            findings.append(_f(
+                "RA208", f"prefetch of arg {pf.arg} issues at input node "
+                         f"{pf.issue} ({g.nodes[pf.issue].name}) — input "
+                         "nodes never execute an iteration, so the issue "
+                         "never happens", n))
+        a = n.inputs[pf.arg]
+        if g.nodes[a].kind != "input" and pf.issue <= a:
+            findings.append(_f(
+                "RA208", f"prefetch of arg {pf.arg} issues at node "
+                         f"{pf.issue}, before its producer "
+                         f"{g.nodes[a].name} (node {a}) has computed — "
+                         "the chain would read a stale or missing "
+                         "buffer", n))
+    for e in trace.events:
+        if e.prefetch_for < 0 or e.prefetch_for in recorded_consumers:
+            continue
+        recorded_consumers.add(e.prefetch_for)  # one finding per consumer
+        where = (g.nodes[e.prefetch_for] if 0 <= e.prefetch_for < len(g.nodes)
+                 else None)
+        msg = (f"{e.kind} is marked prefetch_for node {e.prefetch_for} but "
+               "the schedule records no matching Prefetch lifetime — the "
+               "memory pass cannot charge its buffer")
+        findings.append(_f("RA208", msg, where) if where is not None
+                        else Finding("RA208", msg))
 
     # RA205/RA206: traced wire elems vs the planner's §7 prices ------------
     # The §7 objective treats graph inputs as pre-placed (§8.2): the cost

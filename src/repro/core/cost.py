@@ -213,6 +213,38 @@ def node_cost_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int
 
 
 # ---------------------------------------------------------------------------
+# Beyond-paper: overlap-aware exposed wire (graph-wide lookahead prefetch).
+#
+# The §7 terms price wire *volume*; wall-clock pays only the part not hidden
+# behind local compute.  The shard_map executor's lookahead pass issues each
+# ready consumer's repartition chain before an earlier node's compute block
+# (core/spmd.py), so the wire it moves is overlappable — but a compute block
+# can only hide so much: we bound the hidden volume per issue site by that
+# site's local-compute window (its local output elems), so the term can't
+# pretend unbounded traffic disappears behind a tiny block.
+# ---------------------------------------------------------------------------
+
+
+def exposed_wire(total_elems: int, overlap_by_site: dict[int, int],
+                 window_by_site: dict[int, int]) -> int:
+    """Exposed (non-hidden) wire elems of a schedule.
+
+    ``total_elems`` is the schedule's total traced wire volume;
+    ``overlap_by_site`` maps each issue site (node id) to the overlappable
+    wire elems issued behind its compute block (hoisted prefetch chains at
+    their issue node, rule-internal overlaps like the ring's double buffer
+    at their own node); ``window_by_site`` maps each node to its
+    local-compute window (``Schedule.compute_elems`` — local output elems,
+    the proxy for how much wire that block can hide).
+
+        exposed = max(total − Σ_site min(overlap, window), 0)
+    """
+    hidden = sum(min(int(v), int(window_by_site.get(site, 0)))
+                 for site, v in overlap_by_site.items())
+    return max(int(total_elems) - hidden, 0)
+
+
+# ---------------------------------------------------------------------------
 # CostModel: the pricing strategy the §8 DP runs with.
 # ---------------------------------------------------------------------------
 
@@ -265,6 +297,15 @@ class CostModel:
                            + agg * self.coeffs.get("psum_scatter", 1.0))
             return node_cost_collective(spec, d, bounds)
         return node_cost(spec, d, bounds)
+
+    def exposed(self, total_elems: int, overlap_by_site: dict[int, int],
+                window_by_site: dict[int, int]) -> int:
+        """Overlap-aware exposed wire of a realized schedule (see
+        ``exposed_wire``) — the volume left after hiding each issue site's
+        overlappable traffic behind its local-compute window.  Mode- and
+        coefficient-independent: overlap changes *when* wire moves, not
+        how a kind is priced."""
+        return exposed_wire(total_elems, overlap_by_site, window_by_site)
 
     @classmethod
     def with_measured(cls, source) -> "CostModel":

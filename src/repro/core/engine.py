@@ -199,7 +199,8 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
                 offpath_repart: bool = True,
                 executor: str = "gspmd",
                 collective_trace=None,
-                fuse: bool = True) -> Callable:
+                fuse: bool = True,
+                lookahead: int = 1) -> Callable:
     """Build a jit-able ``f(feed_list) -> outputs`` for the graph.  Feeds are
     passed positionally in input-node order (differentiable wrt any of them).
 
@@ -215,7 +216,10 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
     ``by_rule``) of the opaque ring/a2a programs.  ``fuse`` (default on,
     shard_map only) routes repartitions through the fused chain planner
     when it moves fewer wire elems; ``fuse=False`` restores the unfused
-    per-step lowering.
+    per-step lowering.  ``lookahead`` (default 1, shard_map only) is the
+    graph-wide overlap window — ready consumers' arg repartitions issue up
+    to that many compute nodes early so collectives fly behind local
+    compute; ``lookahead=0`` restores the serial issue order verbatim.
 
     If no ``plan`` is given but planning inputs are (``p``, ``mesh_axes``,
     or a ``mesh`` together with a ``cache``), the runner plans the graph
@@ -267,7 +271,8 @@ def make_runner(g: EinGraph, out_ids: Sequence[int] | None = None, *,
             raise ValueError("make_runner: executor='shard_map' needs a "
                              "mesh and a (mesh-mode) plan")
         mapped = spmd.make_spmd_runner(g, out_ids, plan=plan, mesh=mesh,
-                                       trace=collective_trace, fuse=fuse)
+                                       trace=collective_trace, fuse=fuse,
+                                       lookahead=lookahead)
 
         def f_spmd(*arrays):
             outs = mapped(*arrays)

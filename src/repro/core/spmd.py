@@ -39,6 +39,7 @@ replicate-gather path: inputs gathered, dense compute, consumers re-slice.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -79,6 +80,12 @@ class CollectiveEvent:
     # (repro.analysis RA201) runs over this, so it verifies the permutation
     # that actually executes, not a re-derivation.
     perm: tuple = ()
+    # graph-wide lookahead attribution: the consumer node whose argument
+    # this event prefetches (-1 = not a hoisted issue).  ``nid`` stays the
+    # consumer, so per-node bounds and elems_by_node are issue-order
+    # independent; rule-internal overlaps (the ring's double buffer) keep
+    # prefetch_for = -1 and are never double-counted against a hoist.
+    prefetch_for: int = -1
 
 
 class CollectiveTrace:
@@ -105,11 +112,13 @@ class CollectiveTrace:
 
     def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
             nbytes: int, rule: str = "", *, fused: bool = False,
-            overlap: bool = False, perm: Sequence = ()) -> None:
+            overlap: bool = False, perm: Sequence = (),
+            prefetch_for: int = -1) -> None:
         self.events.append(CollectiveEvent(kind, tuple(axes), nid,
                                            int(elems), int(nbytes), rule,
                                            fused, overlap,
-                                           tuple(tuple(p) for p in perm)))
+                                           tuple(tuple(p) for p in perm),
+                                           int(prefetch_for)))
 
     def extend(self, other: "CollectiveTrace") -> None:
         self.events.extend(other.events)
@@ -171,10 +180,20 @@ class CollectiveTrace:
 
     @property
     def overlapped_elems(self) -> int:
-        """Wire elems issued to overlap with local compute (the ring's
-        double-buffered K/V hops) — the statically auditable overlap
-        attribution."""
+        """Wire elems issued to overlap with local compute — the ring's
+        double-buffered K/V hops plus the graph-wide lookahead prefetches
+        — the statically auditable overlap attribution.  Each event counts
+        once: a hoisted chain is marked ``prefetch_for >= 0``, a
+        rule-internal overlap keeps ``prefetch_for = -1``; no event is
+        ever both."""
         return sum(e.elems for e in self.events if e.overlap)
+
+    @property
+    def prefetched_elems(self) -> int:
+        """Wire elems carried by graph-wide lookahead prefetches only
+        (hoisted arg repartitions; excludes rule-internal overlaps like
+        the ring's double buffer)."""
+        return sum(e.elems for e in self.events if e.prefetch_for >= 0)
 
     @property
     def overlap_counts(self) -> dict[str, int]:
@@ -543,7 +562,13 @@ class NodeProgram:
     """Everything the body needs to execute one node: per-arg repartition
     steps, the post-compute reduction/slice steps, and the output layout.
     Opaque nodes additionally carry the shard rule that lowered them and
-    its ``run`` closure (the per-device local program)."""
+    its ``run`` closure (the per-device local program).
+
+    ``prefetch`` lists the (consumer nid, arg index) chains the lookahead
+    pass hoisted to this node: the runner issues them before this node's
+    local compute block, so the wire flies while the block runs.
+    ``prefetch_src`` is the consumer-side mirror — arg index → the node
+    whose iteration issues that arg's chain."""
 
     nid: int
     arg_steps: list[list[tuple]] = field(default_factory=list)
@@ -551,16 +576,62 @@ class NodeProgram:
     layout: Layout = ()
     rule: str = ""
     run: Callable | None = None
+    prefetch: list[tuple[int, int]] = field(default_factory=list)
+    prefetch_src: dict[int, int] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class Prefetch:
+    """One hoisted repartition's buffer lifetime: consumer node
+    ``consumer``'s argument ``arg`` has its wire chain issued just before
+    node ``issue``'s local compute block, so the repartitioned shard is
+    live from ``issue`` until ``consumer`` reads it.  ``elems`` is the
+    chain's total ring-priced wire elems (the overlappable volume the
+    cost model's exposed-wire term hides behind ``issue``'s compute
+    window)."""
+
+    consumer: int
+    arg: int
+    issue: int
+    elems: int
 
 
 @dataclass
 class Schedule:
-    """The full static lowering of (graph, plan, mesh shape)."""
+    """The full static lowering of (graph, plan, mesh shape).
+
+    ``lookahead`` records the window the schedule was built with;
+    ``prefetches`` the hoisted buffer lifetimes (empty at lookahead=0 —
+    that lowering is verbatim the serial PR-6 one); ``compute_elems`` a
+    per-node local-compute window proxy (local output elems) bounding how
+    much wire each node's compute can hide."""
 
     programs: list[NodeProgram]
     layouts: dict[int, Layout]
     trace: CollectiveTrace
     sizes: dict[str, int]
+    lookahead: int = 0
+    prefetches: list[Prefetch] = field(default_factory=list)
+    compute_elems: dict[int, int] = field(default_factory=dict)
+
+    def exposed_wire_elems(self) -> int:
+        """Wire elems left exposed after overlap: total minus what each
+        issue site's local-compute window can hide (``cost.exposed_wire``
+        — overlap can't hide unbounded traffic behind a small block).
+        Rule-internal overlaps (ring double buffer) hide behind their own
+        node's compute; hoisted chains behind their issue node's."""
+        from repro.core.cost import exposed_wire
+
+        overlap_by_site: dict[int, int] = {}
+        for e in self.trace.events:
+            if e.overlap and e.prefetch_for < 0:
+                overlap_by_site[e.nid] = (overlap_by_site.get(e.nid, 0)
+                                          + e.elems)
+        for pf in self.prefetches:
+            overlap_by_site[pf.issue] = (overlap_by_site.get(pf.issue, 0)
+                                         + pf.elems)
+        return exposed_wire(self.trace.total_elems, overlap_by_site,
+                            self.compute_elems)
 
 
 def _norm_axes(axes, sizes: dict[str, int]) -> tuple[str, ...]:
@@ -641,7 +712,8 @@ def _scatter_dim(g: EinGraph, plan, nid: int, ax: str,
 
 def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
                   trace: CollectiveTrace, n_dev: int, consumers,
-                  out_set, fuse: bool = True) -> NodeProgram:
+                  out_set, fuse: bool = True,
+                  spans: dict | None = None) -> NodeProgram:
     """join→agg lowering of one einsum node: per-arg repartitions to the
     plan layout, then the aggregation collectives (psum / pmax / pmin /
     gather-reduce), with sum-aggregations fused to reduce-scatters when the
@@ -651,7 +723,7 @@ def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
     spec = n.spec
     prog = NodeProgram(nid=nid)
     itemsize = _itemsize(n.dtype)
-    for ls, a in zip(spec.in_labels, n.inputs):
+    for ai, (ls, a) in enumerate(zip(spec.in_labels, n.inputs)):
         req = tuple(_norm_axes(ax_n.get(l, ()), sizes) for l in ls)
         src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
         if fuse:
@@ -661,9 +733,12 @@ def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
             steps, was_fused = _plan_repart_sized(layouts[a], req,
                                                   sizes), False
         prog.arg_steps.append(steps)
+        e0 = len(trace.events)
         got = _record_steps(trace, steps, src_shape, sizes, n_dev,
                             nid, _itemsize(g.nodes[a].dtype),
                             fused=was_fused)
+        if spans is not None:
+            spans[(nid, ai)] = (e0, len(trace.events))
         want_shape = local_shape(g.nodes[a].shape, req, sizes)
         assert got == want_shape, (nid, a, got, want_shape)
 
@@ -709,7 +784,8 @@ def _lower_einsum(g: EinGraph, n: Node, plan, ax_n, layouts, sizes,
 
 def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
                   trace: CollectiveTrace, n_dev: int,
-                  fuse: bool = True) -> NodeProgram:
+                  fuse: bool = True,
+                  spans: dict | None = None) -> NodeProgram:
     """Dispatch one opaque node through the shard-rule registry
     (core/opaque_rules.py).  The resolved rule requests per-input layouts
     (repartitioned by the generic machinery, so arbitrary producers are
@@ -733,7 +809,7 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
     prog.run = low.run
     trace.rule_by_node[nid] = rule_name
 
-    for a, req in zip(n.inputs, low.arg_layouts):
+    for ai, (a, req) in enumerate(zip(n.inputs, low.arg_layouts)):
         src_shape = local_shape(g.nodes[a].shape, layouts[a], sizes)
         if fuse:
             steps, was_fused = plan_repart_best(layouts[a], req, sizes,
@@ -742,9 +818,12 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
             steps, was_fused = _plan_repart_sized(layouts[a], req,
                                                   sizes), False
         prog.arg_steps.append(steps)
+        e0 = len(trace.events)
         got = _record_steps(trace, steps, src_shape, sizes, n_dev, nid,
                             _itemsize(g.nodes[a].dtype), rule_name,
                             fused=was_fused)
+        if spans is not None:
+            spans[(nid, ai)] = (e0, len(trace.events))
         want_shape = local_shape(g.nodes[a].shape, req, sizes)
         assert got == want_shape, (nid, a, got, want_shape)
     for ev in low.events:
@@ -765,9 +844,66 @@ def _lower_opaque(g: EinGraph, n: Node, ax_n, layouts, sizes,
     return prog
 
 
+#: arg repartition chains are composed of exactly these wire kinds (plus
+#: free local slices) — the hoistable set of the lookahead pass.
+_HOISTABLE_KINDS = ("all_gather", "all_to_all", "ppermute")
+
+
+def _hoist_prefetches(g: EinGraph, programs: list[NodeProgram],
+                      trace: CollectiveTrace, spans: dict,
+                      lookahead: int) -> list[Prefetch]:
+    """Graph-wide lookahead pass: each wire-carrying arg chain of an
+    einsum/opaque consumer M hoists to the ``lookahead``-th computing node
+    before M — never before the chain's *own* producer (per-argument
+    readiness: the chain reads only that producer's value, so sibling args
+    still in flight don't serialize it) — and the collectives fly while
+    the intervening local compute blocks run.  Topo positions equal nids
+    (``topo_order`` is construction order — the invariant the memory pass
+    already relies on).  Hoisted events are retroactively marked
+    ``overlap=True, prefetch_for=M``; their ``nid`` stays M so per-node
+    attribution is issue-order independent.  Returns the hoisted buffer
+    lifetimes."""
+    progs = {p.nid: p for p in programs}
+    prefetches: list[Prefetch] = []
+    for n in g.nodes:
+        if n.kind in ("input", "map"):
+            continue  # inputs don't execute; maps repartition nothing
+        m = n.nid
+        prog = progs[m]
+        for ai in range(len(prog.arg_steps)):
+            span = spans.get((m, ai))
+            if not span or span[0] == span[1]:
+                continue  # slice-only chain: nothing crosses the wire
+            evs = trace.events[span[0]:span[1]]
+            if any(e.kind not in _HOISTABLE_KINDS for e in evs):
+                continue
+            # per-arg readiness: the chain needs its own producer computed
+            # (graph inputs are bound before the loop — always ready)
+            a = n.inputs[ai]
+            ready = a + 1 if g.nodes[a].kind != "input" else 0
+            # the issue point is the ``lookahead``-th *computing* node
+            # before M (input nodes never execute an iteration, so they
+            # don't consume the window), clamped at readiness
+            issue, p, seen = m, m - 1, 0
+            while p >= ready and seen < lookahead:
+                if g.nodes[p].kind != "input":
+                    issue, seen = p, seen + 1
+                p -= 1
+            if issue >= m:
+                continue  # no intervening compute to hide the wire behind
+            for idx in range(span[0], span[1]):
+                trace.events[idx] = dataclasses.replace(
+                    trace.events[idx], overlap=True, prefetch_for=m)
+            progs[issue].prefetch.append((m, ai))
+            prog.prefetch_src[ai] = issue
+            prefetches.append(Prefetch(m, ai, issue,
+                                       sum(e.elems for e in evs)))
+    return prefetches
+
+
 def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
                    out_ids: Sequence[int] | None = None, *,
-                   fuse: bool = True) -> Schedule:
+                   fuse: bool = True, lookahead: int = 1) -> Schedule:
     """Lower (graph, plan, mesh shape) to the static collective schedule.
 
     Pure Python over static shapes — no jax, no devices — so trace
@@ -779,6 +915,13 @@ def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
     wire elems, the PR-3 unfused chain otherwise; ``fuse=False`` restores
     the unfused lowering verbatim (the equivalence baseline
     tests/test_spmd_fastpath.py diffs against).
+
+    ``lookahead`` (default 1) is the graph-wide overlap window: each ready
+    consumer's wire-carrying arg chains are hoisted up to ``lookahead``
+    nodes before the consumer (never before the consumer's producers), so
+    the collectives issue while the intervening local compute runs —
+    recorded as ``Prefetch`` lifetimes and ``prefetch_for``-marked events.
+    ``lookahead=0`` restores the serial lowering verbatim.
     """
     sizes = {a: int(s) for a, s in mesh_axes.items()}
     n_dev = math.prod(sizes.values()) if sizes else 1
@@ -787,6 +930,8 @@ def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
     trace = CollectiveTrace()
     layouts: dict[int, Layout] = {}
     programs: list[NodeProgram] = []
+    compute_elems: dict[int, int] = {}
+    spans: dict[tuple[int, int], tuple[int, int]] = {}
 
     for nid in g.topo_order():
         n = g.nodes[nid]
@@ -801,16 +946,28 @@ def build_schedule(g: EinGraph, plan, mesh_axes: dict[str, int],
             prog.layout = layouts[n.inputs[0]]
         elif n.kind == "einsum":
             prog = _lower_einsum(g, n, plan, ax_n, layouts, sizes, trace,
-                                 n_dev, consumers, out_set, fuse)
+                                 n_dev, consumers, out_set, fuse, spans)
         else:
             prog = _lower_opaque(g, n, ax_n, layouts, sizes, trace, n_dev,
-                                 fuse)
+                                 fuse, spans)
 
         layouts[nid] = prog.layout
         programs.append(prog)
+        if n.kind != "input":
+            try:
+                compute_elems[nid] = math.prod(
+                    local_shape(n.shape, prog.layout, sizes))
+            except (ValueError, KeyError):
+                pass  # unrealizable layout: the analysis passes flag it
+
+    prefetches: list[Prefetch] = []
+    if lookahead > 0:
+        prefetches = _hoist_prefetches(g, programs, trace, spans,
+                                       int(lookahead))
 
     return Schedule(programs=programs, layouts=layouts, trace=trace,
-                    sizes=sizes)
+                    sizes=sizes, lookahead=int(lookahead),
+                    prefetches=prefetches, compute_elems=compute_elems)
 
 
 # ---------------------------------------------------------------------------
@@ -982,6 +1139,7 @@ def make_spmd_runner(
     mesh,
     trace: CollectiveTrace | None = None,
     fuse: bool = True,
+    lookahead: int = 1,
 ) -> Callable:
     """Build ``f(*input_arrays) -> tuple(outputs)`` executing the planned
     graph as one ``shard_map`` with explicit collectives.
@@ -989,7 +1147,11 @@ def make_spmd_runner(
     Requires a mesh-mode plan (``plan.axes_by_node``); ``trace`` (optional)
     receives the static ``CollectiveEvent`` schedule at build time.
     ``fuse=False`` disables the fused repartition planner (the unfused
-    PR-3 lowering, kept as the equivalence baseline).  Jit-able and
+    PR-3 lowering, kept as the equivalence baseline).  ``lookahead``
+    (default 1) enables the graph-wide overlap pass: ready consumers' arg
+    repartitions issue before an earlier node's compute block — the same
+    values flow through the same collectives in a different issue order,
+    so outputs are bit-identical to ``lookahead=0``.  Jit-able and
     differentiable like the GSPMD runner.
     """
     from repro.core import engine
@@ -1003,7 +1165,8 @@ def make_spmd_runner(
             "plan with mesh_axes so labels map to named mesh axes")
     out_ids = list(out_ids) if out_ids is not None else g.outputs()
     sizes = engine.mesh_axes_dict(mesh)
-    sched = build_schedule(g, plan, sizes, out_ids, fuse=fuse)
+    sched = build_schedule(g, plan, sizes, out_ids, fuse=fuse,
+                           lookahead=lookahead)
     if trace is not None:
         trace.extend(sched.trace)
 
@@ -1018,13 +1181,25 @@ def make_spmd_runner(
         vals: dict[int, Any] = {}
         for i, arr in zip(in_ids, local_inputs):
             vals[i] = jnp.asarray(arr)
+        prefetched: dict[tuple[int, int], Any] = {}
         for nid in g.topo_order():
             n = g.nodes[nid]
             if n.kind == "input":
                 continue
             prog = progs[nid]
-            args = [_run_steps(vals[a], steps, sched.sizes)
-                    for a, steps in zip(n.inputs, prog.arg_steps)]
+            # hoisted issue points first: downstream consumers' repartition
+            # chains enter the traced program before this node's compute
+            # block, giving XLA's latency-hiding scheduler room to run the
+            # wire behind it (same ops on the same values — bit-identical)
+            for (m, ai) in prog.prefetch:
+                a = g.nodes[m].inputs[ai]
+                prefetched[(m, ai)] = _run_steps(
+                    vals[a], progs[m].arg_steps[ai], sched.sizes)
+            args = [prefetched.pop((nid, i))
+                    if (nid, i) in prefetched
+                    else _run_steps(vals[a], steps, sched.sizes)
+                    for i, (a, steps) in enumerate(zip(n.inputs,
+                                                       prog.arg_steps))]
             if n.kind == "einsum":
                 v = local_einsum(n.spec, *args)
                 v = _run_steps(v, prog.post_steps, sched.sizes)

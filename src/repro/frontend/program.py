@@ -130,7 +130,7 @@ class Program:
                 p: int | None = None, cost_model: str = "paper",
                 cache=None, offpath_repart: bool = True,
                 executor: str = "gspmd", jit: bool = True,
-                fuse: bool = True,
+                fuse: bool = True, lookahead: int = 1,
                 donate: bool | Sequence[str] = False) -> "CompiledProgram":
         """Run EinDecomp (through the plan cache) and build the runner.
 
@@ -156,6 +156,12 @@ class Program:
         ``fuse`` (shard_map only; default on) routes repartitions through
         the fused chain planner whenever the fused chain moves fewer wire
         elems (``fuse=False`` restores the unfused per-step lowering).
+        ``lookahead`` (shard_map only; default 1) is the graph-wide overlap
+        window: each ready consumer's arg repartitions issue up to that
+        many compute nodes before the consumer, so the collectives fly
+        while earlier local blocks compute — outputs are bit-identical,
+        only the traced issue order changes.  ``lookahead=0`` restores the
+        serial issue order verbatim (the equivalence baseline).
         ``donate=True`` donates **every** input buffer to the jit-compiled
         runner (``jax.jit(donate_argnums=...)``), letting XLA reuse the
         feeds' device memory for outputs and temporaries; a sequence of
@@ -190,7 +196,8 @@ class Program:
             raise ValueError("compile: cache given but nothing to plan "
                              "with — pass mesh, mesh_axes, or p")
         return CompiledProgram(self, plan=plan, mesh=mesh, jit=jit,
-                               executor=executor, fuse=fuse, donate=donate)
+                               executor=executor, fuse=fuse,
+                               lookahead=lookahead, donate=donate)
 
 
 class CompiledProgram:
@@ -208,11 +215,15 @@ class CompiledProgram:
     and ``.collectives.rule_by_node`` records which rule lowered each
     opaque node.  ``.donate_argnums`` records which positional inputs the
     jit-compiled runner donates (empty unless compiled with ``donate``).
+    ``.lookahead`` is the graph-wide overlap window the shard_map schedule
+    was built with (``collectives.prefetched_elems`` counts the wire it
+    hoisted; ``lookahead=0`` means serial issue order).
     """
 
     def __init__(self, program: Program, *, plan=None, mesh=None,
                  jit: bool = True, executor: str = "gspmd",
-                 fuse: bool = True, donate: bool | Sequence[str] = False):
+                 fuse: bool = True, lookahead: int = 1,
+                 donate: bool | Sequence[str] = False):
         import jax
 
         from repro.core import engine
@@ -221,6 +232,7 @@ class CompiledProgram:
         self.plan = plan
         self.mesh = mesh
         self.executor = executor
+        self.lookahead = int(lookahead)
         self.collectives = None
         g = program.graph
         self._in_ids = g.input_ids()
@@ -235,7 +247,7 @@ class CompiledProgram:
             self.collectives = spmd.CollectiveTrace()
             _positional = spmd.make_spmd_runner(
                 g, out_ids, plan=plan, mesh=mesh, trace=self.collectives,
-                fuse=fuse)
+                fuse=fuse, lookahead=lookahead)
         else:
             def _positional(*arrays):
                 vals = engine.run(g, dict(zip(in_ids, arrays)),

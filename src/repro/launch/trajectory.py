@@ -29,12 +29,17 @@ FAMILIES = ("llama-7b", "mixtral-8x7b", "xlstm-125m", "hymba-1.5b")
 
 def family_ratio(arch: str, phase: str = "prefill",
                  mesh_axes: dict[str, int] | None = None,
-                 fuse: bool = True) -> dict:
+                 fuse: bool = True, lookahead: int = 1) -> dict:
     """Deterministic predicted/traced numbers for one zoo family.
 
     Returns ``{"arch", "phase", "predicted_elems", "traced_elems",
     "ratio"}`` where ``ratio = predicted / traced`` under the paper-mode
-    plan and the static fused schedule.  Pure host Python.
+    plan and the static fused schedule, plus the graph-wide overlap
+    numbers of the ``lookahead`` schedule: ``overlapped_elems`` (ring
+    double-buffer + hoisted prefetches, counted once), ``overlap_frac``
+    (overlapped / traced), and ``exposed_elems`` (wire left after hiding
+    each issue site's overlappable traffic behind its compute window —
+    ``core.cost.exposed_wire``).  Pure host Python.
     """
     from repro.configs import get_config, reduced
     from repro.configs.base import ShapeConfig
@@ -53,12 +58,17 @@ def family_ratio(arch: str, phase: str = "prefill",
     plan = eindecomp(g, math.prod(mesh_axes.values()), mesh_axes=mesh_axes,
                      offpath_repart=True)
     out_ids = [prog._out[k] for k in prog._out]
-    sched = spmd.build_schedule(g, plan, mesh_axes, out_ids, fuse=fuse)
+    sched = spmd.build_schedule(g, plan, mesh_axes, out_ids, fuse=fuse,
+                                lookahead=lookahead)
     predicted = int(plan_cost(g, plan))
     traced = int(sched.trace.total_elems)
+    overlapped = int(sched.trace.overlapped_elems)
     return {"arch": arch, "phase": phase,
             "predicted_elems": predicted, "traced_elems": traced,
-            "ratio": round(predicted / max(traced, 1), 4)}
+            "ratio": round(predicted / max(traced, 1), 4),
+            "overlapped_elems": overlapped,
+            "overlap_frac": round(overlapped / max(traced, 1), 4),
+            "exposed_elems": int(sched.exposed_wire_elems())}
 
 
 def family_ratios(fams=FAMILIES, **kw) -> list[dict]:

@@ -12,8 +12,8 @@ the analyzer's sensitivity, the zoo pins its specificity.
 """
 from tests.analysis_corpus import (bound_mismatched_opaque, cyclic_donation,
                                    nonbijective_ppermute, over_hbm,
-                                   over_rotated_ring, stale_cost,
-                                   unregistered_kind)
+                                   over_rotated_ring, premature_prefetch,
+                                   stale_cost, unregistered_kind)
 
 #: name -> fixture module; tests iterate this registry
 FIXTURES = {
@@ -22,6 +22,7 @@ FIXTURES = {
     "bound_mismatched_opaque": bound_mismatched_opaque,
     "over_hbm": over_hbm,
     "over_rotated_ring": over_rotated_ring,
+    "premature_prefetch": premature_prefetch,
     "stale_cost": stale_cost,
     "unregistered_kind": unregistered_kind,
 }

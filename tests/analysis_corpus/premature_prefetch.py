@@ -1,0 +1,37 @@
+"""Lookahead prefetch issued before its producer has computed (RA208).
+
+The graph-wide overlap pass may hoist a consumer's repartition chain to
+an earlier node's iteration — but never to or before the chain's own
+producer: the hoisted ``_run_steps`` would read a value that does not
+exist yet.  Built by hand (``_hoist_prefetches`` clamps every issue point
+at per-arg readiness, so ``build_schedule`` cannot emit this).
+"""
+from repro.analysis import analyze_schedule_only
+from repro.core.einsum import EinGraph
+from repro.core.spmd import (CollectiveTrace, NodeProgram, Prefetch,
+                             Schedule)
+
+EXPECT = "RA208"
+
+
+def report():
+    g = EinGraph("premature_prefetch")
+    x = g.input("x", "a", (8,))
+    h = g.map("relu", x, name="h")
+    y = g.einsum("a -> a", h)
+    trace = CollectiveTrace()
+    trace.add("all_gather", ("model",), y, 1, 16, overlap=True,
+              prefetch_for=y)
+    # the issue point equals the producer's topo position: the chain runs
+    # at the top of h's iteration, before h's compute has produced vals[h]
+    sched = Schedule(
+        programs=[NodeProgram(h, arg_steps=[[]], layout=((),)),
+                  NodeProgram(y, arg_steps=[[("all_gather", "model", 0)]],
+                              layout=((),))],
+        layouts={x: ((),), h: ((),), y: ((),)},
+        trace=trace,
+        sizes={"model": 2},
+        lookahead=1,
+        prefetches=[Prefetch(consumer=y, arg=0, issue=h, elems=16)],
+    )
+    return analyze_schedule_only(g, sched)

@@ -94,6 +94,25 @@ def test_cli_zoo_clean_and_backend_free(tmp_path):
         assert cell["memory"]["peak_bytes"] > 0
 
 
+def test_zoo_clean_under_lookahead_schedules():
+    """The clean-zoo twin extends to graph-wide lookahead (ISSUE 9): every
+    bench family's prefill cell analyzes clean at lookahead=2 (a wider
+    window than the executor default), the schedules actually hoist
+    (prefetch lifetimes land in the memory report), and the serial
+    lookahead=0 lowering stays clean too."""
+    from repro.analysis.__main__ import FAMILIES as AFAMS, _cell_program
+    from repro.analysis.runner import analyze_program
+
+    for family in AFAMS:
+        prog = _cell_program(family, "prefill")
+        for la in (0, 2):
+            rep = analyze_program(prog, {"data": 2, "model": 4},
+                                  lookahead=la)
+            assert not rep.findings, f"{family}@{la}:\n{rep.format()}"
+            n_pf = rep.memory["n_prefetches"]
+            assert n_pf > 0 if la else n_pf == 0, (family, la, n_pf)
+
+
 def test_cli_list_codes_covers_all_passes():
     from repro.analysis.__main__ import main
 

@@ -1,0 +1,378 @@
+"""Graph-wide lookahead prefetch scheduling (ISSUE 9).
+
+The lookahead pass only reorders *when* repartition chains issue — never
+what they compute — so the properties pinned here are the ones a hoist
+bug would break:
+
+1. **Equivalence** — random EinGraphs and the full zoo (prefill + decode)
+   are bit-identical at ``lookahead=0/1/2``: hoisting runs the same steps
+   on the same values, only the traced issue order changes.
+2. **Serial baseline** — ``lookahead=0`` restores today's lowering
+   verbatim: same events (modulo the prefetch marks), same arg chains,
+   no recorded lifetimes.
+3. **Invariants** — an unsharded plan still emits zero collectives (and
+   zero prefetches); the double-buffered ring composes with graph-level
+   hoisting without double-counting ``overlapped_elems`` (ring events
+   keep ``prefetch_for == -1``; prefetched and ring elems partition the
+   overlap total).
+4. **Memory honesty** — prefetch buffers widen live ranges: ``--max-hbm``
+   RA301 fires on a lookahead schedule whose serial twin fits.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import analyze_schedule_only
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import engine, spmd
+from repro.core.cost import exposed_wire
+from repro.core.decomp import Plan, eindecomp
+from repro.core.einsum import EinGraph, eval_graph_dense
+from repro.launch.mesh import make_host_mesh
+from repro.launch.trajectory import FAMILIES, MESH_AXES, family_ratio
+from repro.models.eingraphs import program_for
+
+RNG = np.random.default_rng(7)
+SIZES = {"data": 2, "model": 4}
+LOOKAHEADS = (0, 1, 2)
+
+
+def _feeds(g, cfg=None, scale=0.1):
+    out = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            hi = cfg.vocab if cfg is not None else max(n.shape[-1], 2)
+            out[n.nid] = RNG.integers(0, hi, size=n.shape).astype(np.int32)
+        else:
+            out[n.nid] = (RNG.normal(size=n.shape) * scale).astype(
+                np.float32)
+    return out
+
+
+def _random_graph(rng):
+    pool = ["i", "j", "k", "l"]
+    g = EinGraph("prop")
+    n_in = int(rng.integers(2, 4))
+    nodes = []
+    for t in range(n_in):
+        nl = int(rng.integers(1, 4))
+        labels = list(rng.choice(pool, size=nl, replace=False))
+        nodes.append(g.input(f"in{t}", labels, [8] * nl))
+    for _ in range(int(rng.integers(1, 4))):
+        a = int(rng.choice(nodes))
+        b = int(rng.choice(nodes))
+        la, lb = g.nodes[a].labels, g.nodes[b].labels
+        union = list(dict.fromkeys(la + lb))
+        keep = [l for l in union if rng.random() < 0.6] or [union[0]]
+        expr = f"{' '.join(la)}, {' '.join(lb)} -> {' '.join(keep)}"
+        try:
+            nodes.append(g.einsum(expr, a, b))
+        except ValueError:
+            continue
+        if rng.random() < 0.3:
+            nodes.append(g.map("relu", nodes[-1]))
+    return g
+
+
+# ---------------------------------------------------------------------------
+# 1. equivalence: bit-identical at lookahead 0/1/2
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_graphs_bit_identical_across_lookahead(seed):
+    rng = np.random.default_rng(200 + seed)
+    g = _random_graph(rng)
+    outs = g.outputs()
+    mesh = make_host_mesh((2, 4))
+    axes = engine.mesh_axes_dict(mesh)
+    plan = eindecomp(g, math.prod(axes.values()), mesh_axes=axes)
+    feeds = _feeds(g)
+    args = [feeds[i] for i in g.input_ids()]
+    results = {}
+    for la in LOOKAHEADS:
+        fn = jax.jit(engine.make_runner(g, outs, plan=plan, mesh=mesh,
+                                        executor="shard_map", lookahead=la))
+        got = fn(*args)
+        results[la] = got if len(outs) > 1 else (got,)
+    for la in LOOKAHEADS[1:]:
+        for o, v0, v in zip(outs, results[0], results[la]):
+            np.testing.assert_array_equal(
+                np.asarray(v0), np.asarray(v),
+                err_msg=f"node {o} diverged at lookahead={la}")
+    dense = eval_graph_dense(g, feeds)
+    for o, v in zip(outs, results[1]):
+        np.testing.assert_allclose(np.asarray(v), dense[o],
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.fixture()
+def _stub_opaques(monkeypatch):
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    def apply(g):
+        for kind, fn in make_stub_opaques(capacity_of(g)).items():
+            monkeypatch.setitem(engine.OPAQUE_FNS, kind, fn)
+
+    return apply
+
+
+@pytest.mark.parametrize("phase", ["prefill", "decode"])
+@pytest.mark.parametrize("arch", list(FAMILIES))
+def test_zoo_bit_identical_across_lookahead(_stub_opaques, arch, phase):
+    """Full zoo, prefill + decode: logits at lookahead 0/1/2 are bitwise
+    equal, and the lookahead schedules move exactly the same wire (the
+    pass reorders issues; it never adds or removes events)."""
+    cfg = reduced(get_config(arch))
+    prog = program_for(cfg, ShapeConfig("eq", phase, 8, 2))
+    g = prog.graph
+    _stub_opaques(g)
+    mesh = make_host_mesh((2, 4))
+    feeds = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            feeds[n.name] = RNG.integers(0, cfg.vocab,
+                                         size=n.shape).astype(np.int32)
+        else:
+            feeds[n.name] = (RNG.normal(size=n.shape) * 0.05).astype(
+                np.float32)
+    logits = {}
+    traces = {}
+    for la in LOOKAHEADS:
+        run = prog.compile(mesh=mesh, executor="shard_map", lookahead=la)
+        assert run.lookahead == la
+        logits[la] = np.asarray(run(feeds)["logits"])
+        traces[la] = run.collectives
+    np.testing.assert_array_equal(logits[0], logits[1])
+    np.testing.assert_array_equal(logits[0], logits[2])
+    assert traces[0].total_elems == traces[1].total_elems \
+        == traces[2].total_elems
+    assert traces[0].elems_by_node == traces[1].elems_by_node
+    assert traces[0].prefetched_elems == 0
+
+
+# ---------------------------------------------------------------------------
+# 2. lookahead=0 restores the serial lowering verbatim
+# ---------------------------------------------------------------------------
+
+
+def _zoo_schedule(arch, phase, lookahead):
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    cfg = reduced(get_config(arch))
+    prog = program_for(cfg, ShapeConfig("bench", phase, 32, 4))
+    g = prog.graph
+    make_stub_opaques(capacity_of(g))
+    plan = eindecomp(g, math.prod(MESH_AXES.values()), mesh_axes=MESH_AXES,
+                     offpath_repart=True)
+    out_ids = [prog._out[k] for k in prog._out]
+    return g, plan, spmd.build_schedule(g, plan, MESH_AXES, out_ids,
+                                        lookahead=lookahead)
+
+
+def test_lookahead_zero_is_serial_verbatim():
+    """The lookahead=1 schedule differs from lookahead=0 only by the
+    prefetch marks: stripping overlap/prefetch_for from hoisted events
+    recovers the serial event list exactly, and every arg chain's steps
+    are unchanged."""
+    g, plan, s0 = _zoo_schedule("llama-7b", "prefill", lookahead=0)
+    _, _, s1 = _zoo_schedule("llama-7b", "prefill", lookahead=1)
+    assert s0.lookahead == 0 and not s0.prefetches
+    assert not any(p.prefetch or p.prefetch_src for p in s0.programs)
+    assert all(e.prefetch_for == -1 for e in s0.trace.events)
+    assert s1.prefetches, "zoo prefill must hoist something"
+    stripped = [dataclasses.replace(e, overlap=False, prefetch_for=-1)
+                if e.prefetch_for >= 0 else e for e in s1.trace.events]
+    assert stripped == s0.trace.events
+    for p0, p1 in zip(s0.programs, s1.programs):
+        assert p0.arg_steps == p1.arg_steps
+        assert p0.post_steps == p1.post_steps
+
+
+def test_prefetch_lifetimes_respect_readiness():
+    """Every recorded lifetime is well-formed on the whole zoo: issue
+    strictly before the consumer, at a computing node, never at or before
+    the arg's own producer — and the RA208 pass agrees (clean)."""
+    for arch in FAMILIES:
+        for phase in ("prefill", "decode"):
+            g, _, sched = _zoo_schedule(arch, phase, lookahead=2)
+            for pf in sched.prefetches:
+                n = g.nodes[pf.consumer]
+                a = n.inputs[pf.arg]
+                assert pf.issue < pf.consumer
+                assert g.nodes[pf.issue].kind != "input"
+                if g.nodes[a].kind != "input":
+                    assert pf.issue > a, (arch, phase, pf)
+            rep = analyze_schedule_only(g, sched)
+            assert not rep.has_errors, f"{arch}/{phase}:\n{rep.format()}"
+
+
+# ---------------------------------------------------------------------------
+# 3. invariants: zero-collective plans, ring composition
+# ---------------------------------------------------------------------------
+
+
+def test_zero_collectives_invariant_survives_lookahead():
+    from repro import frontend as ein
+
+    x = ein.tensor("x", "b a", (8, 16))
+    w1 = ein.tensor("w1", "a f", (16, 32))
+    y = ein.einsum("b a, a f -> b f", x, w1).map("relu")
+    prog = ein.Program({"y": y})
+    mesh = make_host_mesh((1, 1))
+    run = prog.compile(mesh=mesh, executor="shard_map", lookahead=2)
+    assert len(run.collectives) == 0, run.collectives.summary()
+    assert run.collectives.prefetched_elems == 0
+    feeds = {"x": RNG.normal(size=(8, 16)).astype(np.float32),
+             "w1": (RNG.normal(size=(16, 32)) * 0.1).astype(np.float32)}
+    got = np.asarray(run(feeds)["y"])
+    np.testing.assert_allclose(
+        got, np.maximum(feeds["x"] @ feeds["w1"], 0), rtol=1e-4, atol=1e-5)
+
+
+B, H, K, S, D = 2, 4, 2, 32, 16
+
+
+def _attn_graph_with_projection():
+    """Ring-attention graph whose q arrives through a wire-carrying chain
+    with an independent compute node in between — so the schedule carries
+    BOTH ring double-buffer hops and a graph-level prefetch."""
+    g = EinGraph("ring+la")
+    q = g.input("q", "b h s d", (B, H, S, D))
+    k = g.input("k", "b k s d", (B, K, S, D))
+    v = g.input("v", "b k s d", (B, K, S, D))
+    mq = g.map("relu", q, name="mq")       # producer of the opaque's arg 0
+    mk = g.map("relu", k, name="mk")       # independent intervening compute
+    o = g.opaque(
+        "flash_attention", [mq, k, v], "b h s d", (B, H, S, D),
+        in_labels=[("b", "h", "s", "d"), ("b", "k", "s", "d"),
+                   ("b", "k", "s", "d")],
+        shardable={"b", "h", "k", "s"},
+        comm=[{"kind": "ring", "label": "s", "input": 1, "rule": "ring"},
+              {"kind": "ring", "label": "s", "input": 2, "rule": "ring"}])
+    plan = Plan(p=8, mode="mesh")
+    ring_axes = {"s": ("model",), "b": ("data",)}
+    for n in g.nodes:
+        plan.d_by_node[n.nid] = {l: 1 for l in n.labels}
+        if n.nid == q:
+            plan.axes_by_node[n.nid] = {"d": ("model",)}  # forces a gather
+        elif n.kind == "input":
+            plan.axes_by_node[n.nid] = {}
+        else:
+            plan.axes_by_node[n.nid] = dict(ring_axes)
+    return g, o, mk, plan
+
+
+def test_ring_composes_with_lookahead_no_double_count():
+    """Ring hops stay ring-attributed (``prefetch_for == -1``); the
+    hoisted q-gather is prefetch-attributed; ``overlapped_elems`` counts
+    each exactly once — prefetched + ring elems partition the total."""
+    g, o, mk, plan = _attn_graph_with_projection()
+    sched = spmd.build_schedule(g, plan, SIZES, [o], lookahead=1)
+    tr = sched.trace
+    # overlap events partition by prefetch_for: -1 = ring double-buffer
+    # hop, >= 0 = graph-level prefetch (an opaque's *arg chains* also
+    # carry the rule tag, so the rule alone does not identify hops)
+    ring_hops = [e for e in tr.events if e.overlap and e.prefetch_for < 0]
+    ring_elems = sum(e.elems for e in ring_hops)
+    assert ring_elems > 0, "ring double-buffer hops missing"
+    assert all(e.kind == "ppermute" and e.rule == "ring" for e in ring_hops)
+    assert sched.prefetches, "the q-gather chain must hoist"
+    assert all(pf.consumer == o and pf.issue == mk
+               for pf in sched.prefetches)
+    assert tr.prefetched_elems > 0
+    assert tr.overlapped_elems == tr.prefetched_elems + ring_elems
+    # the schedule pass sees no hazard in the composition
+    rep = analyze_schedule_only(g, sched)
+    assert not rep.has_errors, rep.format()
+
+
+def test_ring_with_lookahead_bit_identical():
+    """The composed schedule still executes bit-identically to serial."""
+    g, o, _, plan = _attn_graph_with_projection()
+    mesh = make_host_mesh((2, 4))
+    feeds = _feeds(g, scale=0.3)
+    args = [feeds[i] for i in g.input_ids()]
+    outs = {}
+    for la in LOOKAHEADS:
+        fn = jax.jit(engine.make_runner(g, [o], plan=plan, mesh=mesh,
+                                        executor="shard_map", lookahead=la))
+        outs[la] = np.asarray(fn(*args))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    np.testing.assert_allclose(outs[1], eval_graph_dense(g, feeds)[o],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 4. memory honesty: prefetch buffers widen live ranges (RA301)
+# ---------------------------------------------------------------------------
+
+
+def _prefetch_heavy_cell():
+    """Two full-reduction consumers of one sharded activation: serially
+    each gathers its 16 KiB copy in its own iteration; at lookahead=2
+    both chains pile onto the same issue node."""
+    g = EinGraph("hbm")
+    x = g.input("x", "i j", (64, 64))
+    r = g.map("relu", x, name="r")
+    d = g.map("relu", r, name="d")
+    c1 = g.einsum("i j -> ", r)
+    c2 = g.einsum("i j -> ", r)
+    comb = g.einsum(", -> ", c1, c2)
+    sh = {"i": ("data",), "j": ("model",)}
+    plan = Plan(p=8, mode="mesh",
+                axes_by_node={x: dict(sh), r: dict(sh), d: dict(sh),
+                              c1: {}, c2: {}, comb: {}},
+                d_by_node={n.nid: {} for n in g.nodes})
+    return g, plan, comb
+
+
+def test_max_hbm_fires_on_lookahead_schedule_whose_serial_twin_fits():
+    g, plan, comb = _prefetch_heavy_cell()
+    serial = spmd.build_schedule(g, plan, SIZES, [comb], lookahead=0)
+    hoisted = spmd.build_schedule(g, plan, SIZES, [comb], lookahead=2)
+    rep_s = analyze_schedule_only(g, serial, max_hbm=30_000)
+    rep_h = analyze_schedule_only(g, hoisted, max_hbm=30_000)
+    assert not rep_s.has_errors, rep_s.format()
+    assert "RA301" in rep_h.codes(), rep_h.format()
+    # the widened ranges are visible in the report, not just the finding
+    assert rep_h.memory["peak_bytes"] > rep_s.memory["peak_bytes"]
+    assert rep_h.memory["n_prefetches"] == 2
+    assert rep_h.memory["prefetch_hold_bytes"] > 0
+    assert rep_s.memory["n_prefetches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# 5. cost-model exposure term
+# ---------------------------------------------------------------------------
+
+
+def test_exposed_wire_bounded_by_compute_window():
+    # hiding is per-site min(overlap, window); never negative
+    assert exposed_wire(1000, {2: 300}, {2: 100}) == 900
+    assert exposed_wire(1000, {2: 300}, {2: 10**9}) == 700
+    assert exposed_wire(100, {1: 80, 2: 80}, {1: 10**9, 2: 10**9}) == 0
+    assert exposed_wire(0, {}, {}) == 0
+    # a site with no compute window hides nothing
+    assert exposed_wire(1000, {5: 300}, {}) == 1000
+
+
+@pytest.mark.parametrize("arch", list(FAMILIES))
+def test_family_overlap_frac_positive_and_exposed_consistent(arch):
+    """Every zoo family's prefill schedule hoists wire (the acceptance
+    bar bench_spmd --check enforces), and the exposure term stays within
+    [total − overlapped, total]."""
+    row = family_ratio(arch, "prefill")
+    assert row["overlap_frac"] > 0, row
+    assert row["overlapped_elems"] > 0
+    total = row["traced_elems"]
+    assert total - row["overlapped_elems"] <= row["exposed_elems"] <= total
