@@ -1,0 +1,194 @@
+"""Pipeline-tier benchmark: bubble fractions, cut bytes, and the
+per-stage traced <= priced contract, on a forced 8-device host mesh.
+
+For every model-zoo family, across a (stages p, microbatches m) grid
+(mixtral pipelines at m=1 only — MoE capacity routing couples rows across
+the batch, which ``pipeline.batch_splittable`` rejects):
+
+  1. build the static pipeline schedule (partition -> per-stage §8 DP
+     through one shared plan cache -> GPipe cells + ppermute handoffs)
+     and compile the pipelined runner over the combined (pp, data, model)
+     mesh;
+  2. compile the *unpipelined* baseline from the stitched full-graph plan
+     on the intra-stage mesh and assert the pipelined logits are
+     **bit-identical** to it (the tier's core contract);
+  3. record the static bubble fraction (p-1)/(m+p-1) next to the
+     **measured** one — ``bubble_fraction_weighted`` over the realized
+     per-stage compute elems of the lowered stage schedules: the
+     fill/drain bubble of the GPipe makespan ``sum(c) + (m-1)*max(c)``
+     under the stage weights the executor actually runs (deterministic —
+     forced-host CPU wall-clock would measure dispatch overhead, not
+     pipeline idle time);
+  4. assert, per stage, traced intra-stage wire (one microbatch) stays
+     within ``pipeline.plan.stage_priced_cost`` — the per-stage analogue
+     of bench_spmd's whole-program ``traced <= plan_cost``.
+
+Rows print as ``PIPEROW <arch> ...`` and the run writes
+``BENCH_pipeline.json`` (``{name, metric, value, unit}`` rows) at the
+repo root, picked up by CI's ``BENCH_*.json`` artifact glob.
+
+With ``--check`` the run asserts bit-identity, the per-stage bound, and
+measured bubble <= 1.5x static for every p > 1 cell.
+
+Usage:
+  PYTHONPATH=src python benchmarks/bench_pipeline.py [--check]
+      [--bench-out BENCH_pipeline.json]
+"""
+import argparse
+from pathlib import Path
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(8)
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core.cost import bubble_fraction
+from repro.launch.mesh import make_mesh
+from repro.models.eingraphs import program_for
+from repro.pipeline import PipelineSpec, batch_splittable
+
+FAMILIES = ["llama-7b", "mixtral-8x7b", "xlstm-125m", "hymba-1.5b"]
+GRID = [(1, 1), (1, 4), (2, 1), (2, 4)]
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _feeds(g, vocab, rng):
+    out = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            out[n.name] = rng.integers(0, vocab, size=n.shape).astype(np.int32)
+        else:
+            out[n.name] = (rng.normal(size=n.shape) * 0.05).astype(np.float32)
+    return out
+
+
+def bench_cell(arch: str, p: int, m: int, check: bool, cache) -> dict:
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    rng = np.random.default_rng(0)
+    cfg = reduced(get_config(arch))
+    prog = program_for(cfg, ShapeConfig("bench", "prefill", 32, 4))
+    g = prog.graph
+    make_stub_opaques(capacity_of(g))
+
+    clamped = m > 1 and not batch_splittable(g, "b")
+    m_eff = 1 if clamped else m
+    intra = {"data": 2, "model": 2} if p == 2 else {"data": 2, "model": 4}
+    mesh = make_mesh((p,) + tuple(intra.values()), ("pp",) + tuple(intra))
+    spec = PipelineSpec(stages=p, microbatches=m_eff)
+
+    run = prog.compile(mesh=mesh, executor="shard_map", pipeline=spec,
+                       cache=cache)
+    psc = run.pipeline_schedule
+    base_mesh = make_mesh(tuple(intra.values()), tuple(intra))
+    base = prog.compile(mesh=base_mesh, executor="shard_map",
+                        plan=psc.stitched)
+
+    feeds = _feeds(g, cfg.vocab, rng)
+    out = np.asarray(run(feeds)["logits"])
+    ref = np.asarray(base(feeds)["logits"])
+    bitwise = bool(np.array_equal(out, ref))
+
+    itemsize = 4  # zoo activations are f32
+    cut_bytes = sum(psc.cut_elems) * itemsize
+    stage_rows = []
+    for s in range(p):
+        traced = psc.stage_trace_elems(s)
+        priced = psc.stage_priced(s)
+        stage_rows.append({"stage": s, "traced": traced, "priced": priced,
+                           "ok": traced <= priced})
+
+    row = {
+        "arch": arch, "p": p, "m": m_eff, "clamped": clamped,
+        "bubble_static": psc.bubble,
+        "bubble_measured": psc.bubble_weighted,
+        "cut_bytes": cut_bytes,
+        "handoff_elems": psc.handoff_elems,
+        "cache_hits": psc.cache_stats.get("hits", 0),
+        "stages": stage_rows,
+        "bitwise": bitwise,
+    }
+    tag = " (m clamped: MoE)" if clamped else ""
+    print(f"PIPEROW {arch:14s} p={p} m={m_eff} "
+          f"bubble={psc.bubble:.3f}/{psc.bubble_weighted:.3f} "
+          f"cut={cut_bytes:>10,}B handoff={psc.handoff_elems:>10,} "
+          f"bitwise={'==' if bitwise else '!='}{tag}", flush=True)
+    for sr in stage_rows:
+        print(f"        stage {sr['stage']}: traced={sr['traced']:>12,} "
+              f"priced={sr['priced']:>12,} "
+              f"{'OK' if sr['ok'] else 'OVER'}", flush=True)
+
+    if check:
+        assert bitwise, (
+            f"{arch} p={p} m={m_eff}: pipelined logits diverge from the "
+            "unpipelined stitched-plan baseline")
+        for sr in stage_rows:
+            assert sr["ok"], (
+                f"{arch} p={p} m={m_eff} stage {sr['stage']}: traced "
+                f"{sr['traced']:,} elems exceed the per-stage price "
+                f"{sr['priced']:,}")
+        assert psc.bubble == bubble_fraction(p, m_eff)
+        if p > 1:
+            assert psc.bubble_weighted <= 1.5 * psc.bubble, (
+                f"{arch} p={p} m={m_eff}: measured bubble "
+                f"{psc.bubble_weighted:.3f} is more than 1.5x the static "
+                f"{psc.bubble:.3f} — stage cut badly imbalanced")
+        if p == 1:
+            assert psc.handoff_elems == 0
+    return row
+
+
+def main():
+    from repro.core.plancache import PlanCache
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--bench-out", default=str(REPO_ROOT / "BENCH_pipeline.json"))
+    args = ap.parse_args()
+
+    rows = []
+    for arch in FAMILIES:
+        cache = PlanCache(capacity=64)  # stage dedup within a family
+        seen = set()
+        for p, m in GRID:
+            row = bench_cell(arch, p, m, args.check, cache)
+            if (p, row["m"]) in seen:  # MoE clamp can fold m=4 onto m=1
+                continue
+            seen.add((p, row["m"]))
+            rows.append(row)
+
+    bench_rows = []
+    for r in rows:
+        name = f"pipeline/{r['arch']}/p{r['p']}m{r['m']}"
+        worst = max((sr["traced"] / max(sr["priced"], 1)
+                     for sr in r["stages"]), default=0.0)
+        bench_rows.append({"name": name, "metric": "bubble_static",
+                           "value": round(r["bubble_static"], 4),
+                           "unit": "frac"})
+        bench_rows.append({"name": name, "metric": "bubble_measured",
+                           "value": round(r["bubble_measured"], 4),
+                           "unit": "frac"})
+        bench_rows.append({"name": name, "metric": "cut_bytes",
+                           "value": r["cut_bytes"], "unit": "bytes"})
+        bench_rows.append({"name": name, "metric": "handoff_elems",
+                           "value": r["handoff_elems"], "unit": "elems"})
+        bench_rows.append({"name": name,
+                           "metric": "stage_traced_over_priced_max",
+                           "value": round(worst, 4), "unit": "ratio"})
+        bench_rows.append({"name": name, "metric": "bitwise_vs_unpipelined",
+                           "value": int(r["bitwise"]), "unit": "bool"})
+
+    from _bench_io import write_bench_json
+
+    write_bench_json(bench_rows, Path(args.bench_out))
+    if args.check:
+        print("bench_pipeline: all checks passed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,13 @@ def main(argv=None) -> int:
     ap.add_argument("--lookahead", type=int, default=1,
                     help="graph-wide overlap window (0 = serial issue "
                          "order; default 1, the executor default)")
+    ap.add_argument("--pp", type=int, default=0,
+                    help="pipeline stages: adds a pp=<n> mesh axis and "
+                         "runs the RA4xx pipeline pass (0 = off)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="microbatches for the pipeline pass (clamped to "
+                         "1 for graphs whose rows couple across the "
+                         "batch, e.g. MoE capacity routing)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write the full report to this path")
     ap.add_argument("--list-codes", action="store_true",
@@ -108,12 +115,21 @@ def main(argv=None) -> int:
             if mode == "paged" and family not in PAGED_FAMILIES:
                 continue
             prog = _cell_program(family, mode)
+            mesh = dict(args.mesh)
+            pipeline = None
+            if args.pp:
+                from repro.pipeline import PipelineSpec
+
+                pipeline = PipelineSpec(stages=args.pp,
+                                        microbatches=args.microbatches)
+                mesh = {pipeline.axis: args.pp, **mesh}
             report = analyze_program(
-                prog, dict(args.mesh), max_hbm=args.max_hbm,
+                prog, mesh, max_hbm=args.max_hbm,
                 fuse=not args.no_fuse, lookahead=args.lookahead,
+                pipeline=pipeline,
                 meta={"family": family, "mode": mode,
                       "mesh": ",".join(f"{k}={v}"
-                                       for k, v in args.mesh.items())})
+                                       for k, v in mesh.items())})
             reports.append(report)
             n_errors += len(report.errors)
             n_warnings += len(report.warnings)

@@ -6,6 +6,7 @@ Ruff-style codes, one namespace per pass:
   RA1xx  plan      (divisibility, mesh axes, shard rules, §7 cost)
   RA2xx  schedule  (ppermute bijectivity, donation aliasing, chains)
   RA3xx  memory    (per-device peak live bytes vs --max-hbm)
+  RA4xx  pipeline  (stage chain, handoff ordering, per-stage memory)
 
 Every finding carries the node id/name and — for frontend-traced graphs —
 the ``file.py:line`` that built the node (``Node.srcloc``), so reports are
@@ -74,6 +75,16 @@ CODES: dict[str, tuple[str, str]] = {
     # memory pass ---------------------------------------------------------
     "RA301": (ERROR, "peak per-device live bytes exceed --max-hbm"),
     "RA302": (ERROR, "a single buffer alone exceeds --max-hbm"),
+    # pipeline pass -------------------------------------------------------
+    "RA401": (ERROR, "stage-graph back-edge: a stage receives a tensor "
+                     "produced by the same or a later stage (not a chain)"),
+    "RA402": (ERROR, "premature handoff: a cell's ppermute fires before "
+                     "the producing (stage, microbatch) cell completes"),
+    "RA403": (ERROR, "a single stage's peak live bytes exceed --max-hbm"),
+    "RA404": (WARNING, "stage compute imbalance beyond the partitioner's "
+                       "balance cap (bubble fraction understated)"),
+    "RA405": (ERROR, "a stage schedule's traced wire exceeds the sound "
+                     "per-stage §7 price (per-stage analogue of RA206)"),
 }
 
 

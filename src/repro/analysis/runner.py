@@ -84,16 +84,75 @@ def analyze_schedule_only(g: EinGraph, sched, out_ids=None,
 def analyze_program(program, mesh_axes: dict[str, int],
                     plan: Plan | None = None, donate: Sequence[str] = (),
                     max_hbm: int | None = None, fuse: bool = True,
-                    lookahead: int = 1, meta: dict | None = None) -> Report:
+                    lookahead: int = 1, meta: dict | None = None,
+                    pipeline=None) -> Report:
     """Analyze a frontend ``Program`` under a mesh shape, planning with the
-    §7 DP when no plan is supplied (both steps are backend-free)."""
+    §7 DP when no plan is supplied (both steps are backend-free).
+
+    ``pipeline`` is a ``repro.pipeline.PipelineSpec``: the pipeline pass
+    (RA4xx) builds the static ``PipelineSchedule`` against ``mesh_axes``
+    (which must carry the pipeline axis at size ``stages``) and verifies
+    the stage chain, handoff ordering, per-stage memory, and balance on
+    top of the ordinary four passes — still fully backend-free.  A spec
+    whose microbatches the graph cannot support (rows coupled across the
+    batch label, e.g. MoE capacity routing) is clamped to microbatches=1
+    and noted in the report meta."""
     g = program.graph
     out_ids = [program._out[k] for k in program._out]
+    if pipeline is not None:
+        return _analyze_pipelined(program, g, out_ids, dict(mesh_axes),
+                                  pipeline, donate, max_hbm, fuse,
+                                  lookahead, meta)
     if plan is None:
         p = math.prod(int(s) for s in mesh_axes.values()) if mesh_axes else 1
         plan = eindecomp(g, p, mesh_axes=dict(mesh_axes))
     return analyze(g, plan, dict(mesh_axes), out_ids, donate, max_hbm,
                    fuse, lookahead, meta)
+
+
+def _analyze_pipelined(program, g, out_ids, mesh_axes, pipeline, donate,
+                       max_hbm, fuse, lookahead, meta) -> Report:
+    import dataclasses
+
+    from repro.pipeline import (batch_splittable, build_pipeline_schedule)
+
+    from repro.analysis.pipeline_pass import analyze_pipeline_schedule
+
+    meta = dict(meta or {})
+    spec = pipeline
+    if spec.microbatches > 1 and not batch_splittable(g, spec.batch_label):
+        spec = dataclasses.replace(spec, microbatches=1)
+        meta["microbatches_clamped"] = 1
+    # offpath_repart=False mirrors the plain path's eindecomp default —
+    # the stitched plan is the bit-identity baseline an unpipelined
+    # compile of the same cell would run
+    psched = build_pipeline_schedule(g, spec, mesh_axes, out_ids,
+                                     offpath_repart=False,
+                                     fuse=fuse, lookahead=lookahead)
+    # graph + plan passes analyze the stitched full-graph plan (the
+    # bit-identity baseline the pipeline realizes); the schedule- and
+    # memory-level checks run PER STAGE inside the pipeline pass (RA402 /
+    # RA403 / RA405) — the pipelined executor never runs the whole-graph
+    # schedule, and RA206's whole-graph convention is a statement about
+    # DP-produced plans that a per-stage-optimal stitched plan does not
+    # satisfy (the sound bound is the per-stage price, RA405)
+    report = analyze(g, psched.stitched, None, out_ids, donate, max_hbm,
+                     fuse, lookahead, meta)
+    report.extend(analyze_pipeline_schedule(g, psched, max_hbm))
+    # memory meta: the worst stage's per-device peak — each stage must fit
+    peaks = []
+    for st in psched.stages:
+        if st.sched is None:
+            continue
+        louts = [st.lid_of[gn] for gn in st.out_gids]
+        _, mem = analyze_memory(st.graph, st.sched, louts, (), None)
+        peaks.append(mem)
+    if peaks:
+        report.memory = max(peaks, key=lambda m: m.get("peak_bytes", 0))
+    report.meta.setdefault("pipeline", f"p={spec.stages},m="
+                                       f"{spec.microbatches}")
+    report.meta["bubble"] = round(psched.bubble, 4)
+    return report
 
 
 def analyze_compiled(compiled, max_hbm: int | None = None,

@@ -218,6 +218,32 @@ def graph_key(g: EinGraph) -> str:
     return canonicalize(g).key
 
 
+def subgraph_key(g: EinGraph, nids) -> str:
+    """Stable content hash of the subgraph induced by ``nids`` — the
+    pipeline tier's stage identity (repro.pipeline).
+
+    In-subgraph producer references are encoded as local positions (in id
+    order, which is topo order for this IR); references to producers
+    outside the subgraph collapse to ("ext", shape, dtype) placeholders —
+    exactly the information stage extraction turns into input stubs.  Two
+    node sets that extract to isomorphic stage graphs (repeated
+    transformer layers, whatever their global ids) therefore share a key,
+    which is what lets per-stage plans resolve warm through the plan
+    cache and lets diagnostics report stage dedup honestly.
+    """
+    order = sorted(int(n) for n in nids)
+    pos = {nid: i for i, nid in enumerate(order)}
+    sig = []
+    for nid in order:
+        node = g.nodes[nid]
+        refs = tuple(
+            ("in", pos[a]) if a in pos
+            else ("ext", tuple(g.nodes[a].shape), _dtype_str(g.nodes[a].dtype))
+            for a in (node.inputs[i] for i in operand_order(node)))
+        sig.append(node_struct(g, nid) + (refs,))
+    return hashlib.sha256(repr(tuple(sig)).encode()).hexdigest()
+
+
 def plan_key(
     g: EinGraph,
     p: int,

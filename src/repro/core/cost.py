@@ -88,7 +88,8 @@ def cost_agg(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
 
 
 def cost_repart(
-    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
+    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int],
+    sites: int = 1,
 ) -> int:
     """§7 re-partitioning upper bound, from the producer's partitioning
     ``d_from`` to the consumer's required ``d_to`` over a tensor ``bound``.
@@ -101,6 +102,14 @@ def cost_repart(
 
     cost = (n_c/n_int - 1) * (n/n_c) * (n_c + n_p)
            [+ n_p * (n/n_c) if n_p != n_int]
+
+    ``sites`` counts *distinct consumer placement sites* the repartitioned
+    relation must land on.  The §7 bound above delivers the tensor to one
+    consumer-block site each; when the consumer runs replicated on ``sites``
+    device groups (a gather to a replicated opaque consumer on a p-device
+    mesh has sites = p / prod(d_to)), every extra group must receive the
+    full tensor once more, adding (sites - 1) * n.  The default sites=1 is
+    byte-identical to the historical single-site bound.
     """
     d_from = tuple(int(x) for x in d_from)
     d_to = tuple(int(x) for x in d_to)
@@ -115,6 +124,8 @@ def cost_repart(
     cost = (n_c // n_int - 1) * (n // n_c) * (n_c + n_p)
     if n_p != n_int:
         cost += n_p * (n // n_c)
+    if sites > 1:
+        cost += (sites - 1) * n
     return cost
 
 
@@ -161,9 +172,14 @@ def repart_collective_terms(
 
 
 def cost_repart_collective(
-    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int]
+    d_from: Sequence[int], d_to: Sequence[int], bound: Sequence[int],
+    sites: int = 1,
 ) -> int:
-    return sum(repart_collective_terms(d_from, d_to, bound).values())
+    """Collective repartition price; with ``sites`` > 1 every distinct
+    consumer placement group runs its own collective over the same volume
+    (the traced schedule replays the gather once per replica group)."""
+    return max(sites, 1) * sum(
+        repart_collective_terms(d_from, d_to, bound).values())
 
 
 def cost_agg_collective(spec: EinSpec, d: dict[str, int], bounds: dict[str, int]) -> int:
@@ -245,6 +261,43 @@ def exposed_wire(total_elems: int, overlap_by_site: dict[int, int],
 
 
 # ---------------------------------------------------------------------------
+# Beyond-paper: pipeline-bubble pricing (GPipe fill/drain over a `pp` axis).
+#
+# The §7 terms price wire; a pipeline additionally pays *idle* device time
+# while the schedule fills and drains.  With p stages and m microbatches the
+# GPipe schedule runs m + p - 1 ticks of which p - 1 are fill/drain, so the
+# static bubble fraction is (p-1)/(m+p-1) — independent of tensor sizes.
+# The measured variant replaces the uniform tick with per-stage compute
+# weights: makespan = sum(c_s) + (m-1) * max(c_s) (every microbatch after
+# the first waits on the slowest stage), busy = m * sum(c_s) over p workers.
+# ---------------------------------------------------------------------------
+
+
+def bubble_fraction(stages: int, microbatches: int) -> float:
+    """Static GPipe bubble fraction (p - 1) / (m + p - 1)."""
+    p, m = int(stages), int(microbatches)
+    if p <= 1:
+        return 0.0
+    return (p - 1) / (m + p - 1)
+
+
+def bubble_fraction_weighted(stage_compute: Sequence[int],
+                             microbatches: int) -> float:
+    """Bubble fraction under per-stage compute weights ``stage_compute``
+    (per-microbatch cost proxies, e.g. local compute elems).  Equals the
+    static ``bubble_fraction`` exactly when the stages are balanced and
+    degrades gracefully under imbalance (the slowest stage paces the
+    steady state)."""
+    cs = [int(c) for c in stage_compute]
+    p, m = len(cs), int(microbatches)
+    if p <= 1 or sum(cs) == 0:
+        return 0.0
+    makespan = sum(cs) + (m - 1) * max(cs)
+    busy = m * sum(cs)
+    return max(1.0 - busy / (p * makespan), 0.0)
+
+
+# ---------------------------------------------------------------------------
 # CostModel: the pricing strategy the §8 DP runs with.
 # ---------------------------------------------------------------------------
 
@@ -279,14 +332,14 @@ class CostModel:
     def __repr__(self):
         return f"CostModel({self.describe()})"
 
-    def repart(self, d_from, d_to, bound):
+    def repart(self, d_from, d_to, bound, sites: int = 1):
         if self.mode == "collective":
             if self.coeffs:
                 terms = repart_collective_terms(d_from, d_to, bound)
-                return int(sum(v * self.coeffs.get(k, 1.0)
-                               for k, v in terms.items()))
-            return cost_repart_collective(d_from, d_to, bound)
-        return cost_repart(d_from, d_to, bound)
+                return int(max(sites, 1) * sum(v * self.coeffs.get(k, 1.0)
+                                               for k, v in terms.items()))
+            return cost_repart_collective(d_from, d_to, bound, sites=sites)
+        return cost_repart(d_from, d_to, bound, sites=sites)
 
     def node(self, spec, d, bounds):
         if self.mode == "collective":

@@ -268,20 +268,21 @@ class _DPState:
         self.M: dict[tuple[int, tuple[int, ...]], float] = {}
         # choice[(nid, dZ)] = full d_by_label achieving it
         self.choice: dict[tuple[int, tuple[int, ...]], dict[str, int]] = {}
-        self._best_in: dict[tuple[int, tuple[int, ...]], float] = {}
+        self._best_in: dict[tuple[int, tuple[int, ...], int], float] = {}
 
     def entries(self, nid: int) -> list[tuple[tuple[int, ...], float]]:
         return [(dz, c) for (v, dz), c in self.M.items() if v == nid]
 
-    def best_input_cost(self, a: int, target: tuple[int, ...]) -> float:
+    def best_input_cost(self, a: int, target: tuple[int, ...],
+                        sites: int = 1) -> float:
         """min over dA of M[a, dA] + cost_repart(dA -> target)  (§8.3)."""
-        key = (a, target)
+        key = (a, target, sites)
         if key in self._best_in:
             return self._best_in[key]
         bound = self.g.nodes[a].shape
         best = math.inf
         for da, c in self.entries(a):
-            best = min(best, c + self.cm.repart(da, target, bound))
+            best = min(best, c + self.cm.repart(da, target, bound, sites=sites))
         self._best_in[key] = best
         return best
 
@@ -475,8 +476,9 @@ def _optimize_path(
                              (n.in_labels or (n.labels,) * len(n.inputs)))
             for ls, a in zip(in_label_sets, n.inputs):
                 target = tuple(d.get(l, 1) for l in ls)
+                sites = _consumer_sites(n.kind, target, p)
                 c = _input_cost(state, g, a, target, p, onpath, labeled, plan,
-                                include_all_inputs, offpath_repart)
+                                include_all_inputs, offpath_repart, sites)
                 if c is None:
                     feasible = False
                     break
@@ -492,7 +494,9 @@ def _optimize_path(
                     for ls_m in g.edge_labels(m, nid):
                         dm = plan.d_by_node[m]
                         tgt = tuple(dm.get(l, 1) for l in ls_m)
-                        total += cm.repart(dz_here, tgt, n.shape)
+                        total += cm.repart(
+                            dz_here, tgt, n.shape,
+                            sites=_consumer_sites(g.nodes[m].kind, tgt, p))
             dz = tuple(d.get(l, 1) for l in n.labels)
             key = (nid, dz)
             if total < state.M.get(key, math.inf):
@@ -508,6 +512,23 @@ def _optimize_path(
     _backtrack(g, state, axes_choice, path, dz_best, plan, p, onpath,
                labeled, include_all_inputs, offpath_repart)
     return int(cost)
+
+
+def _consumer_sites(kind: str, target: Sequence[int], p: int) -> int:
+    """Distinct consumer placement groups an input edge delivers to
+    (ROADMAP fix: gathers to replicated consumers traced ~k× the priced
+    cost).  Einsum consumers stay at 1 — ``cost_join`` already prices
+    replication delivery to the join sites, so charging the edge again
+    would double-count.  An opaque consumer with prod(target) distinct
+    blocks on a p-device mesh runs each block on p // prod(target)
+    replica groups; every group beyond the first receives the tensor
+    once more (``cost_repart``'s ``sites`` term)."""
+    if kind != "opaque":
+        return 1
+    t = 1
+    for x in target:
+        t *= int(x)
+    return max(1, p // max(t, 1))
 
 
 def _labeled_consumers(g, nid, labeled, onpath, plan):
@@ -532,10 +553,10 @@ def _in_table(state, g, a, p, onpath, labeled, plan, include_all, offpath_repart
 
 
 def _input_cost(state, g, a, target, p, onpath, labeled, plan,
-                include_all, offpath_repart):
+                include_all, offpath_repart, sites=1):
     node_a = g.nodes[a]
     if a in onpath or (include_all and node_a.kind != "input"):
-        c = state.best_input_cost(a, target)
+        c = state.best_input_cost(a, target, sites)
         return None if math.isinf(c) else c
     if node_a.kind == "input":
         # inputs are pre-placed: choose the best pre-partitioning, cost 0
@@ -543,12 +564,13 @@ def _input_cost(state, g, a, target, p, onpath, labeled, plan,
         opts = input_partitionings(node_a.shape, p)
         if target in opts:
             return 0.0
-        return min(state.cm.repart(o, target, node_a.shape) for o in opts)
+        return min(state.cm.repart(o, target, node_a.shape, sites=sites)
+                   for o in opts)
     if a in labeled:
         if not offpath_repart:
             return 0.0  # paper-faithful §8.4: ignore cross-path repart
         da = tuple(plan.d_by_node[a].get(l, 1) for l in node_a.labels)
-        return float(state.cm.repart(da, target, node_a.shape))
+        return float(state.cm.repart(da, target, node_a.shape, sites=sites))
     return 0.0  # unlabeled off-path input: ignored (§8.4)
 
 
@@ -774,7 +796,8 @@ def plan_cost_by_node(g: EinGraph, plan: Plan) -> dict[int, int]:
                 da_map = plan.d_by_node.get(a, {})
                 da = tuple(da_map.get(l, 1) for l in na.labels)
                 target = tuple(d.get(l, 1) for l in ls)
-                total += cost_repart(da, target, na.shape)
+                total += cost_repart(da, target, na.shape,
+                                     _consumer_sites(n.kind, target, plan.p))
             out[n.nid] = total
     return out
 
@@ -804,5 +827,6 @@ def opaque_node_bound(g: EinGraph, plan: Plan, nid: int) -> int:
         da_map = plan.d_by_node.get(a, {})
         da = tuple(da_map.get(l, 1) for l in na.labels)
         target = tuple(d.get(l, 1) for l in ls)
-        total += cost_repart(da, target, na.shape)
+        total += cost_repart(da, target, na.shape,
+                             _consumer_sites("opaque", target, plan.p))
     return total

@@ -86,6 +86,12 @@ class CollectiveEvent:
     # independent; rule-internal overlaps (the ring's double buffer) keep
     # prefetch_for = -1 and are never double-counted against a hoist.
     prefetch_for: int = -1
+    # pipeline attribution (repro.pipeline): which stage's sub-schedule
+    # emitted the event and during which microbatch it runs (-1 = the
+    # unpipelined executor).  Stage handoffs record as rule="handoff"
+    # ppermute events over the `pp` axis with both fields set.
+    stage: int = -1
+    microbatch: int = -1
 
 
 class CollectiveTrace:
@@ -113,16 +119,35 @@ class CollectiveTrace:
     def add(self, kind: str, axes: Sequence[str], nid: int, elems: int,
             nbytes: int, rule: str = "", *, fused: bool = False,
             overlap: bool = False, perm: Sequence = (),
-            prefetch_for: int = -1) -> None:
+            prefetch_for: int = -1, stage: int = -1,
+            microbatch: int = -1) -> None:
         self.events.append(CollectiveEvent(kind, tuple(axes), nid,
                                            int(elems), int(nbytes), rule,
                                            fused, overlap,
                                            tuple(tuple(p) for p in perm),
-                                           int(prefetch_for)))
+                                           int(prefetch_for), int(stage),
+                                           int(microbatch)))
 
     def extend(self, other: "CollectiveTrace") -> None:
         self.events.extend(other.events)
         self.rule_by_node.update(other.rule_by_node)
+
+    def extend_tagged(self, other: "CollectiveTrace", *, stage: int,
+                      microbatch: int,
+                      nid_map: dict[int, int] | None = None) -> None:
+        """Re-emit ``other``'s events with pipeline (stage, microbatch)
+        attribution — how the pipeline tier replays one stage's static
+        sub-schedule per microbatch into the combined trace.  ``nid_map``
+        translates the stage schedule's local node ids back to global
+        graph ids, so per-node accounting stays meaningful."""
+        remap = nid_map or {}
+        self.events.extend(
+            dataclasses.replace(e, nid=remap.get(e.nid, e.nid),
+                                stage=int(stage),
+                                microbatch=int(microbatch))
+            for e in other.events)
+        self.rule_by_node.update(
+            (remap.get(n, n), r) for n, r in other.rule_by_node.items())
 
     def reset(self) -> None:
         self.events.clear()
@@ -1173,7 +1198,6 @@ def make_spmd_runner(
     in_ids = g.input_ids()
     in_specs = tuple(_pspec(sched.layouts[i]) for i in in_ids)
     out_specs = tuple(_pspec(sched.layouts[o]) for o in out_ids)
-    progs = {p.nid: p for p in sched.programs}
 
     def body(*local_inputs):
         import jax.numpy as jnp
@@ -1181,34 +1205,52 @@ def make_spmd_runner(
         vals: dict[int, Any] = {}
         for i, arr in zip(in_ids, local_inputs):
             vals[i] = jnp.asarray(arr)
-        prefetched: dict[tuple[int, int], Any] = {}
-        for nid in g.topo_order():
-            n = g.nodes[nid]
-            if n.kind == "input":
-                continue
-            prog = progs[nid]
-            # hoisted issue points first: downstream consumers' repartition
-            # chains enter the traced program before this node's compute
-            # block, giving XLA's latency-hiding scheduler room to run the
-            # wire behind it (same ops on the same values — bit-identical)
-            for (m, ai) in prog.prefetch:
-                a = g.nodes[m].inputs[ai]
-                prefetched[(m, ai)] = _run_steps(
-                    vals[a], progs[m].arg_steps[ai], sched.sizes)
-            args = [prefetched.pop((nid, i))
-                    if (nid, i) in prefetched
-                    else _run_steps(vals[a], steps, sched.sizes)
-                    for i, (a, steps) in enumerate(zip(n.inputs,
-                                                       prog.arg_steps))]
-            if n.kind == "einsum":
-                v = local_einsum(n.spec, *args)
-                v = _run_steps(v, prog.post_steps, sched.sizes)
-            elif n.kind == "map":
-                v = engine.MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
-            else:  # opaque: the shard rule's per-device program
-                v = prog.run(args)
-                v = _run_steps(v, prog.post_steps, sched.sizes)
-            vals[nid] = v
+        run_schedule_body(g, sched, vals)
         return tuple(vals[o] for o in out_ids)
 
     return _shard_map(body, mesh, in_specs, out_specs)
+
+
+def run_schedule_body(g: EinGraph, sched: Schedule,
+                      vals: dict[int, Any]) -> dict[int, Any]:
+    """Execute a built ``Schedule``'s per-node programs inside a shard_map
+    body.  ``vals`` maps every input node id to its local block on entry;
+    on return it additionally holds every computed node's local value.
+
+    Shared by the unpipelined runner above and the pipeline tier
+    (repro.pipeline.exec), which calls it once per (stage, microbatch)
+    cell with the stage subgraph and a ``vals`` dict pre-fed from handoff
+    buffers — so both executors realize the identical per-node lowering.
+    """
+    from repro.core import engine
+
+    progs = {p.nid: p for p in sched.programs}
+    prefetched: dict[tuple[int, int], Any] = {}
+    for nid in g.topo_order():
+        n = g.nodes[nid]
+        if n.kind == "input":
+            continue
+        prog = progs[nid]
+        # hoisted issue points first: downstream consumers' repartition
+        # chains enter the traced program before this node's compute
+        # block, giving XLA's latency-hiding scheduler room to run the
+        # wire behind it (same ops on the same values — bit-identical)
+        for (m, ai) in prog.prefetch:
+            a = g.nodes[m].inputs[ai]
+            prefetched[(m, ai)] = _run_steps(
+                vals[a], progs[m].arg_steps[ai], sched.sizes)
+        args = [prefetched.pop((nid, i))
+                if (nid, i) in prefetched
+                else _run_steps(vals[a], steps, sched.sizes)
+                for i, (a, steps) in enumerate(zip(n.inputs,
+                                                   prog.arg_steps))]
+        if n.kind == "einsum":
+            v = local_einsum(n.spec, *args)
+            v = _run_steps(v, prog.post_steps, sched.sizes)
+        elif n.kind == "map":
+            v = engine.MAP_FNS[n.op](vals[n.inputs[0]], **n.params)
+        else:  # opaque: the shard rule's per-device program
+            v = prog.run(args)
+            v = _run_steps(v, prog.post_steps, sched.sizes)
+        vals[nid] = v
+    return vals

@@ -131,7 +131,8 @@ class Program:
                 cache=None, offpath_repart: bool = True,
                 executor: str = "gspmd", jit: bool = True,
                 fuse: bool = True, lookahead: int = 1,
-                donate: bool | Sequence[str] = False) -> "CompiledProgram":
+                donate: bool | Sequence[str] = False,
+                pipeline=None, plan=None) -> "CompiledProgram":
         """Run EinDecomp (through the plan cache) and build the runner.
 
         Planning inputs mirror ``eindecomp``/``make_runner``: a jax ``mesh``
@@ -168,6 +169,22 @@ class Program:
         input names donates just those.  Donation invalidates the caller's
         fed jax arrays after the call (numpy feeds are copied to device
         and always safe), so it is strictly opt-in; requires ``jit=True``.
+
+        ``pipeline=PipelineSpec(stages=p, microbatches=m)`` compiles the
+        pipelined realization (repro.pipeline): the graph is cut into
+        ``p`` stage subgraphs, each planned by the same §8 DP against the
+        intra-stage submesh (warm through ``cache``), and lowered to ONE
+        shard_map over the combined mesh running the GPipe cell schedule
+        with ppermute handoffs over the ``spec.axis`` (default ``"pp"``)
+        mesh axis — the mesh must carry that axis at size ``stages``.
+        Outputs are bit-identical to the unpipelined compile; ``.plan``
+        is the stitched full-graph plan and ``.pipeline_schedule`` the
+        static schedule (cells, per-stage traces, bubble fraction).
+        Requires ``executor='shard_map'``; donation is not supported.
+
+        ``plan=`` short-circuits planning with a caller-supplied mesh-mode
+        plan (e.g. the pipeline tier's stitched plan, to compile the exact
+        bit-identity baseline) — mutually exclusive with ``pipeline=``.
         """
         from repro.core.decomp import eindecomp
         from repro.core.engine import EXECUTORS, mesh_axes_dict
@@ -185,8 +202,33 @@ class Program:
         if executor == "shard_map" and mesh is None:
             raise ValueError("compile: executor='shard_map' needs a jax "
                              "mesh (mesh_axes alone cannot place shards)")
-        plan = None
-        if mesh_axes is not None or p is not None:
+        if pipeline is not None:
+            if plan is not None:
+                raise ValueError("compile: pipeline= builds its own "
+                                 "stitched plan — plan= is mutually "
+                                 "exclusive with it")
+            if executor != "shard_map" or mesh is None:
+                raise ValueError("compile: pipeline= needs "
+                                 "executor='shard_map' and a jax mesh "
+                                 "carrying the pipeline axis")
+            if donate:
+                raise ValueError("compile: donate is not supported with "
+                                 "pipeline= — microbatch chunks alias the "
+                                 "fed batch buffers")
+            from repro.pipeline import build_pipeline_schedule
+
+            psched = build_pipeline_schedule(
+                self.graph, pipeline, mesh_axes,
+                [self._out[k] for k in self._out],
+                cache=cache, offpath_repart=offpath_repart,
+                cost_mode=cost_model, fuse=fuse, lookahead=lookahead)
+            return CompiledProgram(self, plan=psched.stitched, mesh=mesh,
+                                   jit=jit, executor="shard_map", fuse=fuse,
+                                   lookahead=lookahead,
+                                   pipeline_schedule=psched)
+        if plan is not None:
+            pass  # caller-supplied plan (e.g. the stitched baseline)
+        elif mesh_axes is not None or p is not None:
             if p is None:
                 p = math.prod(mesh_axes.values())
             plan = eindecomp(self.graph, p, mesh_axes=mesh_axes,
@@ -223,7 +265,8 @@ class CompiledProgram:
     def __init__(self, program: Program, *, plan=None, mesh=None,
                  jit: bool = True, executor: str = "gspmd",
                  fuse: bool = True, lookahead: int = 1,
-                 donate: bool | Sequence[str] = False):
+                 donate: bool | Sequence[str] = False,
+                 pipeline_schedule=None):
         import jax
 
         from repro.core import engine
@@ -234,6 +277,7 @@ class CompiledProgram:
         self.executor = executor
         self.lookahead = int(lookahead)
         self.collectives = None
+        self.pipeline_schedule = pipeline_schedule
         g = program.graph
         self._in_ids = g.input_ids()
         self._in_names = tuple(g.nodes[i].name for i in self._in_ids)
@@ -241,7 +285,14 @@ class CompiledProgram:
         out_ids = [program._out[k] for k in self._out_names]
         in_ids = self._in_ids
 
-        if executor == "shard_map":
+        if pipeline_schedule is not None:
+            from repro.pipeline.exec import make_pipeline_runner
+
+            # the combined trace is static — built at schedule time, with
+            # (stage, microbatch) attribution and rule="handoff" ppermutes
+            self.collectives = pipeline_schedule.trace
+            _positional = make_pipeline_runner(g, pipeline_schedule, mesh)
+        elif executor == "shard_map":
             from repro.core import spmd
 
             self.collectives = spmd.CollectiveTrace()

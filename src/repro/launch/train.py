@@ -39,9 +39,12 @@ def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
           mesh=None, ckpt_dir: str | None = None, ckpt_every: int = 50,
           schedule: str = "cosine", peak_lr: float = 3e-4,
           log_every: int = 10, seed: int = 0, plan_cache=None,
-          executor: str = "gspmd") -> dict:
+          executor: str = "gspmd", pp: int = 1,
+          microbatches: int = 1) -> dict:
     mesh = mesh or make_host_mesh()
     axes = mesh_axes_dict(mesh)
+    if pp > 1:
+        _print_pipeline_summary(cfg, shape, axes, pp, microbatches)
     # warm-start planning from the persistent cache: on restart (or elastic
     # reshard onto a mesh some earlier job already planned) the §8 DP is a
     # cache hit instead of a re-run.  The training path runs on the Program
@@ -115,6 +118,32 @@ def train(cfg, shape: ShapeConfig, *, steps_total: int = 100,
     return {"history": history, "params": params, "opt_state": opt_state}
 
 
+def _print_pipeline_summary(cfg, shape: ShapeConfig, intra_axes: dict,
+                            pp: int, microbatches: int) -> None:
+    """Static pipeline report for the forward program: partition the graph
+    into ``pp`` stages over a combined (pp, intra) mesh, price the GPipe
+    bubble and handoff wire, and print the fill/drain summary.  The
+    training step itself still runs the unpipelined plan — 1F1B grad-path
+    pipelining is the pipeline tier's documented stretch goal."""
+    from repro.pipeline import PipelineSpec, build_pipeline_schedule
+
+    prog = program_for(cfg, shape)
+    combined = {"pp": pp, **intra_axes}
+    psched = build_pipeline_schedule(
+        prog.graph, PipelineSpec(stages=pp, microbatches=microbatches),
+        combined, [prog._out[k] for k in prog._out])
+    cut_b = sum(psched.cut_elems) * 4
+    print(f"[train] pipeline (static): p={pp} m={psched.spec.microbatches} "
+          f"bubble={psched.bubble:.3f} "
+          f"(weighted {psched.bubble_weighted:.3f}) "
+          f"cut={cut_b:,}B handoff={psched.handoff_elems:,} elems")
+    for st in psched.stages:
+        print(f"[train]   stage {st.index}: {len(st.nids)} nodes, "
+              f"recv {len(st.recv)} tensors")
+    print("[train] note: the optimizer step runs the unpipelined plan "
+          "(1F1B grad pipelining is the tier's stretch goal)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama-7b")
@@ -133,6 +162,14 @@ def main() -> None:
                     help="plan realization: GSPMD sharding hints, or the "
                          "explicit-collective shard_map executor "
                          "(prints its static collective schedule)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages: with --pp > 1, partition the "
+                         "forward graph over a pp mesh axis and print the "
+                         "static GPipe schedule (bubble, cut bytes, "
+                         "handoff wire) before training")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="GPipe microbatches per step for the --pp summary "
+                         "(must divide --batch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -141,7 +178,8 @@ def main() -> None:
     shape = ShapeConfig("cli", "train", args.seq, args.batch)
     train(cfg, shape, steps_total=args.steps, ckpt_dir=args.ckpt,
           schedule=args.schedule, plan_cache=args.plan_cache,
-          executor=args.executor)
+          executor=args.executor, pp=args.pp,
+          microbatches=args.microbatches)
 
 
 if __name__ == "__main__":

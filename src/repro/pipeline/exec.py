@@ -1,0 +1,131 @@
+"""Pipeline executor: ONE shard_map over the combined (pp, intra) mesh.
+
+Realization (documented in docs/architecture.md "Pipeline tier"): compute
+is **replicated over the pp axis** — every pp slice executes every
+(stage, microbatch) cell of the GPipe schedule as straight-line traced
+code, and each stage handoff is a *cyclic rotation* ``ppermute`` over pp.
+Because the graph inputs enter replicated over pp and every intra-stage
+collective acts within a pp slice, all slices hold identical values at
+every point; the rotation therefore preserves values exactly (slice i
+receives from slice i-1 what it already holds) while putting the handoff
+bytes on the pp wire precisely where a stage-resident pipeline would.
+The static tier (PipelineSchedule: cells, per-stage traces, bubble) is
+the honest cost model of the stage-resident schedule; this executor is
+its bit-exact value realization — and what makes ``pipeline=`` outputs
+bit-identical to the unpipelined stitched-plan compile, which the tests
+and bench assert across the zoo.
+
+Microbatches are split from (and re-concatenated onto) the batch
+dimension OUTSIDE the shard_map but inside the jitted wrapper: each
+microbatch's output chunk is assembled to its global rows first, so the
+concatenation restores exact row order (concatenating *local* blocks
+inside the body would interleave rows after out-spec assembly).
+
+With a size-1 (or absent) pp axis no handoffs are emitted at all and the
+single stage's schedule is the serial ``build_schedule`` verbatim — the
+zero-collectives invariant the tests pin.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.core import spmd
+from repro.core.einsum import EinGraph
+
+from repro.pipeline.schedule import PipelineSchedule
+
+
+def make_pipeline_runner(g: EinGraph, psched: PipelineSchedule,
+                         mesh) -> Callable:
+    """Build ``f(*input_arrays) -> tuple(outputs)`` executing the GPipe
+    cell schedule inside one shard_map over ``mesh`` (which must carry the
+    combined axes ``psched.sizes``).  Jit-able like the other runners."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    spec = psched.spec
+    p, m = spec.stages, spec.microbatches
+    pp = psched.sizes.get(spec.axis, 1)
+    intra = {a: s for a, s in psched.sizes.items() if a != spec.axis}
+    stages = psched.stages
+    stitched = psched.stitched
+    out_ids = psched.out_ids
+    perm = [(i, (i + 1) % pp) for i in range(pp)]
+
+    in_ids = g.input_ids()
+    in_layout = {i: spmd._plan_layout(g.nodes[i],
+                                      stitched.axes_by_node.get(i, {}),
+                                      intra)
+                 for i in in_ids}
+    batched_in = {i: (m > 1 and spec.batch_label in g.nodes[i].labels)
+                  for i in in_ids}
+    stage_of = {gn: st.index for st in stages for gn in st.nids}
+
+    def out_layout(o: int):
+        st = stages[stage_of[o]]
+        return st.sched.layouts[st.lid_of[o]]
+
+    batched_out = {o: (m > 1 and spec.batch_label in g.nodes[o].labels)
+                   for o in out_ids}
+
+    # flattened shard_map signature: one slot per (input, microbatch) for
+    # batch-carrying inputs, one shared slot otherwise; same for outputs
+    flat_in: list[tuple[int, int | None]] = []
+    for i in in_ids:
+        flat_in.extend((i, mb) for mb in range(m)) if batched_in[i] \
+            else flat_in.append((i, None))
+    flat_out: list[tuple[int, int | None]] = []
+    for o in out_ids:
+        flat_out.extend((o, mb) for mb in range(m)) if batched_out[o] \
+            else flat_out.append((o, None))
+
+    in_specs = tuple(spmd._pspec(in_layout[i]) for i, _ in flat_in)
+    out_specs = tuple(spmd._pspec(out_layout(o)) for o, _ in flat_out)
+
+    def body(*local_chunks):
+        gvals: list[dict[int, Any]] = [{} for _ in range(m)]
+        for (gid, mb), arr in zip(flat_in, local_chunks):
+            v = jnp.asarray(arr)
+            if mb is None:
+                for d in gvals:
+                    d[gid] = v
+            else:
+                gvals[mb][gid] = v
+        for (s, mb) in psched.cells:
+            st = stages[s]
+            vals: dict[int, Any] = {
+                ln: gvals[mb][gn] for gn, ln in st.lid_of.items()
+                if st.graph.nodes[ln].kind == "input"}
+            spmd.run_schedule_body(st.graph, st.sched, vals)
+            for gn in st.out_gids:
+                gvals[mb][gn] = vals[st.lid_of[gn]]
+            if s < p - 1 and pp > 1:
+                for u in psched.boundaries[s]:
+                    gvals[mb][u] = lax.ppermute(gvals[mb][u], spec.axis,
+                                                perm)
+        return tuple(gvals[mb if mb is not None else 0][gid]
+                     for gid, mb in flat_out)
+
+    mapped = spmd._shard_map(body, mesh, in_specs, out_specs)
+
+    def runner(*arrays):
+        flat = []
+        for i, arr in zip(in_ids, arrays):
+            if batched_in[i]:
+                dim = g.nodes[i].labels.index(spec.batch_label)
+                flat.extend(jnp.split(jnp.asarray(arr), m, axis=dim))
+            else:
+                flat.append(arr)
+        res = mapped(*flat)
+        outs, k = [], 0
+        for o in out_ids:
+            if batched_out[o]:
+                dim = g.nodes[o].labels.index(spec.batch_label)
+                outs.append(jnp.concatenate(res[k:k + m], axis=dim))
+                k += m
+            else:
+                outs.append(res[k])
+                k += 1
+        return tuple(outs)
+
+    return runner

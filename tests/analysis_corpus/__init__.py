@@ -12,7 +12,8 @@ the analyzer's sensitivity, the zoo pins its specificity.
 """
 from tests.analysis_corpus import (bound_mismatched_opaque, cyclic_donation,
                                    nonbijective_ppermute, over_hbm,
-                                   over_rotated_ring, premature_prefetch,
+                                   over_rotated_ring, premature_handoff,
+                                   premature_prefetch, stage_cycle,
                                    stale_cost, unregistered_kind)
 
 #: name -> fixture module; tests iterate this registry
@@ -22,7 +23,9 @@ FIXTURES = {
     "bound_mismatched_opaque": bound_mismatched_opaque,
     "over_hbm": over_hbm,
     "over_rotated_ring": over_rotated_ring,
+    "premature_handoff": premature_handoff,
     "premature_prefetch": premature_prefetch,
+    "stage_cycle": stage_cycle,
     "stale_cost": stale_cost,
     "unregistered_kind": unregistered_kind,
 }

@@ -1,0 +1,37 @@
+"""Handoff issued before its producer cell completes (RA402).
+
+``build_pipeline_schedule`` appends each boundary's ppermute events after
+the producing cell's intra-stage events, so the executor ships values
+that exist.  This fixture hand-orders the combined trace the other way:
+cell (0, 0)'s handoff fires, THEN the cell issues a psum — the ppermute
+would ship a partial sum the stage has not reduced yet.
+"""
+from repro.analysis.findings import Report
+from repro.analysis.pipeline_pass import analyze_pipeline_schedule
+from repro.core.decomp import Plan
+from repro.core.einsum import EinGraph
+from repro.core.spmd import CollectiveTrace
+from repro.pipeline.partition import PipelineSpec, _extract_stage
+from repro.pipeline.schedule import PipelineSchedule
+
+EXPECT = "RA402"
+
+
+def report():
+    g = EinGraph("premature_handoff")
+    x = g.input("x", "a", (8,))
+    a = g.map("relu", x, name="a")
+    b = g.map("relu", a, name="b")
+    stages = [_extract_stage(g, 0, [a]), _extract_stage(g, 1, [b])]
+    trace = CollectiveTrace()
+    trace.add("ppermute", ("pp",), a, 16, 64, rule="handoff",
+              perm=((0, 1), (1, 0)), stage=0, microbatch=0)
+    trace.add("psum", ("data",), a, 16, 64, stage=0, microbatch=0)
+    psched = PipelineSchedule(
+        spec=PipelineSpec(stages=2), stages=stages,
+        stitched=Plan(p=1, mode="mesh"), cells=[(0, 0), (1, 0)],
+        boundaries=[[a]], trace=trace, sizes={"pp": 2, "data": 2},
+        out_ids=[b])
+    r = Report(meta={"fixture": "premature_handoff"})
+    r.extend(analyze_pipeline_schedule(g, psched))
+    return r

@@ -1,0 +1,35 @@
+"""Stage-graph back-edge: a stage receives a later stage's tensor (RA401).
+
+The partitioner cuts the topo sequence contiguously, so its chains are
+dependency-closed by construction — this fixture swaps the two stages of
+a two-node chain by hand (stage 0 holds the *consumer*, stage 1 the
+producer), the cut a buggy partitioner reordering nodes would emit.  The
+handoff would have to flow backwards over the pp ring: a cycle.
+"""
+from repro.analysis.findings import Report
+from repro.analysis.pipeline_pass import analyze_pipeline_schedule
+from repro.core.decomp import Plan
+from repro.core.einsum import EinGraph
+from repro.core.spmd import CollectiveTrace
+from repro.pipeline.partition import PipelineSpec, _extract_stage
+from repro.pipeline.schedule import PipelineSchedule
+
+EXPECT = "RA401"
+
+
+def report():
+    g = EinGraph("stage_cycle")
+    x = g.input("x", "a", (8,))
+    a = g.map("relu", x, name="a")
+    b = g.map("relu", a, name="b")
+    # stage 0 = {b} (consumer), stage 1 = {a} (producer): b's handoff stub
+    # receives a, which stage 1 — a LATER stage — produces
+    stages = [_extract_stage(g, 0, [b]), _extract_stage(g, 1, [a])]
+    psched = PipelineSchedule(
+        spec=PipelineSpec(stages=2), stages=stages,
+        stitched=Plan(p=1, mode="mesh"), cells=[(0, 0), (1, 0)],
+        boundaries=[[]], trace=CollectiveTrace(), sizes={"pp": 2},
+        out_ids=[b])
+    r = Report(meta={"fixture": "stage_cycle"})
+    r.extend(analyze_pipeline_schedule(g, psched))
+    return r

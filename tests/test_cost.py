@@ -101,3 +101,53 @@ def test_collective_node_cost_includes_join_replication():
     # unary nodes still move nothing at the join in either mode
     unary = EinSpec((("i", "j"),), ("i",), "id", "sum")
     assert cost_join_collective(unary, {"i": 4, "j": 2}, b64) == 0
+
+
+# ---------------------------------------------------------------------------
+# sites-aware repartition pricing (the fan-out fix)
+# ---------------------------------------------------------------------------
+
+
+def test_cost_repart_sites_surcharge():
+    """sites counts distinct consumer placement groups: each group beyond
+    the first receives the full tensor once more; sites=1 is byte-identical
+    to the historical single-site bound."""
+    da, ones, bound = (1, 2), (1, 1), (16, 8)
+    base = cost_repart(da, ones, bound)
+    assert cost_repart(da, ones, bound, sites=1) == base
+    n = 16 * 8
+    for sites in (2, 4, 8):
+        assert cost_repart(da, ones, bound, sites) == base + (sites - 1) * n
+    # identity reparts stay free regardless of fan-out
+    assert cost_repart(da, da, bound, sites=8) == 0
+
+
+def test_priced_covers_traced_on_fanout_gather():
+    """Regression for the single-consumer-site assumption: a producer
+    sharded 2-way over one axis of a 2x4 mesh feeds a replicated opaque —
+    the realized gather replays on every one of the 8 placement groups, so
+    the traced wire (n_dev * (k-1) * n_loc) exceeds the old single-site §7
+    bound.  The sites-aware price restores priced >= traced."""
+    import numpy as np
+
+    from repro.core import spmd
+    from repro.core.decomp import Plan, plan_cost_by_node
+    from repro.core.einsum import EinGraph
+
+    g = EinGraph("fanout")
+    t = g.input("table", "v a", (16, 8))
+    i = g.input("ids", "b", (4,), dtype=np.int32)
+    r = g.map("relu", t)
+    o = g.opaque("gather_rows", [r, i], "b a", (4, 8),
+                 in_labels=[("v", "a"), ("b",)], shardable={"b", "a"})
+    plan = Plan(p=8, mode="mesh")
+    plan.d_by_node = {t: {"v": 1, "a": 2}, i: {"b": 1},
+                      r: {"v": 1, "a": 2}, o: {"b": 1, "a": 1}}
+    plan.axes_by_node = {t: {"a": ("data",)}, i: {},
+                         r: {"a": ("data",)}, o: {}}
+    sched = spmd.build_schedule(g, plan, {"data": 2, "model": 4}, [o])
+    traced = sched.trace.elems_by_node[o]
+    assert traced > 0
+    old_price = cost_repart((1, 2), (1, 1), (16, 8))  # single-site bound
+    new_price = plan_cost_by_node(g, plan)[o]
+    assert old_price < traced <= new_price

@@ -1,0 +1,435 @@
+"""Pipeline tier (repro.pipeline): partitioner, microbatch schedule,
+ppermute handoffs, and the bit-identity contract.
+
+Layers of the pin, mirroring the subsystem:
+
+1. **Partitioner** — contiguous dependency-closed stages, min cut-edge
+   bytes under the balance cap, identity fast path, multi-hop liveness.
+2. **Planning** — repeated (structurally identical) stages hash equal
+   and resolve warm through the canonical plan cache; p=1 lowers to the
+   serial ``build_schedule`` verbatim.
+3. **Static schedule** — GPipe cell order, (stage, microbatch) trace
+   attribution, zero handoff collectives on a size-1 pp axis, the static
+   bubble fraction (p-1)/(m+p-1).
+4. **Execution** — pipelined outputs bit-identical to the unpipelined
+   stitched-plan compile: random graphs and the full zoo across a
+   (p, m) grid (mixtral pipelines at m=1: MoE capacity routing couples
+   rows across the batch, which ``batch_splittable`` rejects).
+
+Multi-device cells skip when the host has too few devices (the CI
+multi-device matrix forces 8).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config, reduced
+from repro.core import engine, spmd
+from repro.core.cost import bubble_fraction, bubble_fraction_weighted
+from repro.core.decomp import eindecomp
+from repro.core.einsum import EinGraph
+from repro.core.plancache import PlanCache
+from repro.launch.mesh import make_mesh
+from repro.launch.trajectory import FAMILIES
+from repro.models.eingraphs import program_for
+from repro.pipeline import (PipelineSpec, batch_splittable,
+                            build_pipeline_schedule, partition_stages,
+                            scale_graph_batch)
+
+RNG = np.random.default_rng(0)
+N_DEV = len(jax.devices())
+
+needs4 = pytest.mark.skipif(N_DEV < 4, reason="needs >= 4 devices")
+needs8 = pytest.mark.skipif(N_DEV < 8, reason="needs >= 8 devices")
+
+
+# ---------------------------------------------------------------------------
+# 1. partitioner
+# ---------------------------------------------------------------------------
+
+
+def _waist_graph():
+    """Four balanced einsum hops with a narrow waist after the second —
+    the min-byte cut must land on the waist tensor."""
+    g = EinGraph("waist")
+    x = g.input("x", "b a", (8, 64))
+    w1 = g.input("w1", "a c", (64, 64))
+    w2 = g.input("w2", "c d", (64, 4))
+    w3 = g.input("w3", "d e", (4, 64))
+    w4 = g.input("w4", "e f", (64, 64))
+    h1 = g.einsum("b a, a c -> b c", x, w1)
+    h2 = g.einsum("b c, c d -> b d", h1, w2)   # the waist: (8, 4)
+    h3 = g.einsum("b d, d e -> b e", h2, w3)
+    h4 = g.einsum("b e, e f -> b f", h3, w4)
+    return g, [h1, h2, h3, h4]
+
+
+def test_partition_p1_identity():
+    g, _ = _waist_graph()
+    stages = partition_stages(g, PipelineSpec(stages=1, microbatches=1))
+    assert len(stages) == 1 and stages[0].graph is g
+    assert stages[0].recv == []
+
+
+def test_partition_cuts_at_the_waist():
+    g, (h1, h2, h3, h4) = _waist_graph()
+    stages = partition_stages(g, PipelineSpec(stages=2))
+    assert [st.nids for st in stages] == [[h1, h2], [h3, h4]]
+    # exactly the waist tensor crosses the boundary
+    assert stages[1].recv == [h2]
+
+
+def test_partition_stages_contiguous_and_closed():
+    g, _ = _waist_graph()
+    stages = partition_stages(g, PipelineSpec(stages=3))
+    seq = [nid for nid in g.topo_order() if g.nodes[nid].kind != "input"]
+    flat = [nid for st in stages for nid in st.nids]
+    assert flat == seq  # contiguous cover, topo order, no node dropped
+    stage_of = {gn: st.index for st in stages for gn in st.nids}
+    for st in stages:
+        assert st.nids, "empty stage"
+        for gn in st.recv:
+            assert stage_of[gn] < st.index  # chain: only earlier stages
+
+
+def test_partition_too_many_stages_raises():
+    g, _ = _waist_graph()
+    with pytest.raises(ValueError, match="stages"):
+        partition_stages(g, PipelineSpec(stages=5))
+
+
+def test_multi_hop_tensor_lives_on_every_boundary():
+    """A tensor consumed k stages downstream is charged at (and relayed
+    over) every intermediate boundary."""
+    g = EinGraph("relay")
+    x = g.input("x", "b a", (8, 8))
+    a = g.map("relu", x, name="a")
+    b = g.map("relu", a, name="b")
+    c = g.einsum("b a, b a -> b a", a, b)  # consumes stage-0's a at stage 2
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=3), {"pp": 3})
+    assert [st.nids for st in psc.stages] == [[a], [b], [c]]
+    assert psc.boundaries[0] == [a]
+    assert psc.boundaries[1] == [a, b]
+    relayed = [e.nid for e in psc.trace.events if e.rule == "handoff"]
+    assert relayed.count(a) == 2 and relayed.count(b) == 1
+
+
+def test_scale_graph_batch():
+    g, _ = _waist_graph()
+    gm = scale_graph_batch(g, 4, "b")
+    assert gm.nodes[0].shape == (2, 64)       # b: 8 -> 2
+    assert gm.nodes[1].shape == (64, 64)      # no batch label: untouched
+    assert scale_graph_batch(g, 1, "b") is g
+    with pytest.raises(ValueError, match="divisible"):
+        scale_graph_batch(g, 3, "b")
+
+
+def test_moe_batch_coupling_rejected():
+    """MoE capacity routing couples rows across the batch: splittable is
+    False and m > 1 partitioning raises; the dense families split fine."""
+    moe = program_for(reduced(get_config("mixtral-8x7b")),
+                      ShapeConfig("eq", "prefill", 8, 2)).graph
+    dense = program_for(reduced(get_config("llama-7b")),
+                        ShapeConfig("eq", "prefill", 8, 2)).graph
+    assert not batch_splittable(moe, "b")
+    assert batch_splittable(dense, "b")
+    with pytest.raises(ValueError, match="couples rows"):
+        partition_stages(moe, PipelineSpec(stages=2, microbatches=2))
+
+
+# ---------------------------------------------------------------------------
+# 2. planning: warm cache, serial verbatim
+# ---------------------------------------------------------------------------
+
+
+def _layered_graph(n_layers=4):
+    """n structurally identical einsum layers — repeated-stage dedup."""
+    g = EinGraph("layers")
+    h = g.input("x", "b a", (8, 32))
+    for i in range(n_layers):
+        w = g.input(f"w{i}", "a c", (32, 32))
+        h = g.einsum("b a, a c -> b a", h, w)
+    return g
+
+
+def test_repeated_stages_hash_equal_and_hit_warm():
+    g = _layered_graph(4)
+    cache = PlanCache()
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=2),
+                                  {"pp": 2, "data": 2}, cache=cache)
+    assert psc.stages[0].key == psc.stages[1].key
+    # stage 1 is structurally stage 0 (handoff stub == input stub): its §8
+    # plan resolves warm — one DP run plans both transformer halves
+    assert psc.cache_stats["misses"] == 1
+    assert psc.cache_stats["hits"] == 1
+
+
+def test_p1_reproduces_serial_schedule_verbatim():
+    g = _layered_graph(3)
+    axes = {"data": 2, "model": 2}
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=1),
+                                  {"pp": 1, **axes})
+    direct = spmd.build_schedule(
+        g, eindecomp(g, 4, mesh_axes=axes, offpath_repart=True), axes,
+        g.outputs())
+    st = psc.stages[0]
+    assert st.graph is g
+    assert st.sched.programs == direct.programs
+    assert st.sched.layouts == direct.layouts
+    assert st.sched.trace.events == direct.trace.events
+    # and the combined trace is the stage trace, (0, 0)-tagged
+    assert len(psc.trace.events) == len(direct.trace.events)
+    assert all(e.stage == 0 and e.microbatch == 0
+               for e in psc.trace.events)
+
+
+# ---------------------------------------------------------------------------
+# 3. static schedule: cells, attribution, bubble, zero-collective pp=1
+# ---------------------------------------------------------------------------
+
+
+def test_gpipe_cell_order():
+    g = _layered_graph(4)
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=2, microbatches=4),
+                                  {"pp": 2})
+    assert psc.cells == [(0, 0), (0, 1), (1, 0), (0, 2), (1, 1),
+                         (0, 3), (1, 2), (1, 3)]
+    assert psc.bubble == bubble_fraction(2, 4) == pytest.approx(1 / 5)
+
+
+def test_bubble_fraction_static_and_weighted():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 1) == pytest.approx(3 / 4)
+    assert bubble_fraction(2, 7) == pytest.approx(1 / 8)
+    # balanced stages: the weighted fill/drain bubble IS the static one
+    for p, m in [(2, 4), (3, 5), (4, 1)]:
+        assert bubble_fraction_weighted([100] * p, m) == \
+            pytest.approx(bubble_fraction(p, m))
+    # imbalance only ever raises it
+    assert bubble_fraction_weighted([100, 300], 4) > bubble_fraction(2, 4)
+    assert bubble_fraction_weighted([0, 0], 4) == 0.0
+
+
+def test_trace_attribution_and_handoff_tagging():
+    g = _layered_graph(4)
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=2, microbatches=2),
+                                  {"pp": 2, "data": 2})
+    assert psc.trace.events, "expected a non-empty combined trace"
+    for e in psc.trace.events:
+        assert 0 <= e.stage < 2 and 0 <= e.microbatch < 2
+    handoffs = [e for e in psc.trace.events if e.rule == "handoff"]
+    # one boundary tensor x two microbatches, each a cyclic pp ppermute
+    assert len(handoffs) == 2
+    for e in handoffs:
+        assert e.kind == "ppermute" and e.axes == ("pp",)
+        assert sorted(e.perm) == [(0, 1), (1, 0)]
+    # handoff fires after its producing cell's events (RA402 by order)
+    idx = {id(e): i for i, e in enumerate(psc.trace.events)}
+    for h in handoffs:
+        for e in psc.trace.events:
+            if (e.stage, e.microbatch) == (h.stage, h.microbatch) \
+                    and e.rule != "handoff":
+                assert idx[id(e)] < idx[id(h)]
+
+
+@pytest.mark.parametrize("m", [1, 4])
+def test_zero_handoff_collectives_on_size1_pp_axis(m):
+    """A (1, ·) pp axis emits NO handoff collectives at all — pipelining
+    degenerates to the plain schedule plus microbatch splitting."""
+    g = _layered_graph(4)
+    psc = build_pipeline_schedule(
+        g, PipelineSpec(stages=1, microbatches=m), {"pp": 1, "data": 2})
+    assert psc.handoff_elems == 0
+    assert all(e.rule != "handoff" for e in psc.trace.events)
+    assert all("pp" not in e.axes for e in psc.trace.events)
+    assert psc.bubble == 0.0
+
+
+def test_mesh_axis_size_must_match_stages():
+    g = _layered_graph(4)
+    with pytest.raises(ValueError, match="must agree"):
+        build_pipeline_schedule(g, PipelineSpec(stages=2), {"pp": 1})
+
+
+def test_stage_traced_within_priced():
+    """Per stage: traced intra-stage wire for one microbatch stays within
+    the §7 stage price (bench_pipeline --check's bound, statically)."""
+    g = _layered_graph(4)
+    psc = build_pipeline_schedule(g, PipelineSpec(stages=2, microbatches=2),
+                                  {"pp": 2, "data": 2, "model": 2})
+    for s in range(2):
+        assert psc.stage_trace_elems(s) <= psc.stage_priced(s)
+
+
+# ---------------------------------------------------------------------------
+# 4. execution: bit-identical to the unpipelined stitched-plan compile
+# ---------------------------------------------------------------------------
+
+
+def _feeds(g, rng):
+    feeds = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            feeds[n.name] = rng.integers(0, 4, size=n.shape).astype(np.int32)
+        else:
+            feeds[n.name] = rng.normal(size=n.shape).astype(np.float32)
+    return feeds
+
+
+def _run_pair(prog, p, m, intra_axes):
+    """(pipelined outputs, stitched-baseline outputs, PipelineSchedule)."""
+    shape = (p,) + tuple(intra_axes.values())
+    mesh = make_mesh(shape, ("pp",) + tuple(intra_axes))
+    run = prog.compile(mesh=mesh, executor="shard_map",
+                       pipeline=PipelineSpec(stages=p, microbatches=m))
+    base_mesh = make_mesh(tuple(intra_axes.values()), tuple(intra_axes))
+    base = prog.compile(mesh=base_mesh, executor="shard_map",
+                        plan=run.pipeline_schedule.stitched)
+    return run, base
+
+
+@needs4
+@pytest.mark.parametrize("p,m", [(1, 1), (1, 2), (2, 1), (2, 2), (2, 4)])
+def test_chain_pipelined_bit_identical_grid(p, m):
+    from repro import frontend as ein
+
+    g = _layered_graph(4)
+    prog = ein.Program.from_graph(g, {"y": g.outputs()[-1]})
+    run, base = _run_pair(prog, p, m, {"data": 2})
+    feeds = _feeds(g, np.random.default_rng(p * 10 + m))
+    out = np.asarray(run(feeds)["y"])
+    ref = np.asarray(base(feeds)["y"])
+    np.testing.assert_array_equal(out, ref)
+    psc = run.pipeline_schedule
+    assert psc.bubble == bubble_fraction(p, m)
+    if p == 1:
+        assert psc.handoff_elems == 0
+
+
+def _random_batched_graph(rng):
+    """Random einsum chain where every node keeps the batch label ``b``."""
+    pool = ["i", "j", "k"]
+    g = EinGraph("rand")
+    nl = int(rng.integers(1, 3))
+    labels = ["b"] + list(rng.choice(pool, size=nl, replace=False))
+    h = g.input("x", labels, [8] * len(labels))
+    nodes = [h]
+    for t in range(int(rng.integers(2, 5))):
+        la = g.nodes[nodes[-1]].labels
+        nl = int(rng.integers(1, 3))
+        wl = list(rng.choice(pool, size=nl, replace=False))
+        w = g.input(f"w{t}", wl, [8] * nl)
+        union = list(dict.fromkeys(list(la) + wl))
+        keep = ["b"] + [l for l in union
+                        if l != "b" and rng.random() < 0.6]
+        expr = f"{' '.join(la)}, {' '.join(wl)} -> {' '.join(keep)}"
+        nodes.append(g.einsum(expr, nodes[-1], w))
+        if rng.random() < 0.3:
+            nodes.append(g.map("relu", nodes[-1]))
+    return g
+
+
+@needs4
+@pytest.mark.parametrize("seed", range(6))
+def test_random_graphs_pipelined_bit_identical(seed):
+    from repro import frontend as ein
+
+    rng = np.random.default_rng(seed)
+    g = _random_batched_graph(rng)
+    n_stageable = sum(1 for n in g.nodes if n.kind != "input")
+    p = 2 if n_stageable >= 2 else 1
+    m = 2 if batch_splittable(g, "b") else 1
+    prog = ein.Program.from_graph(
+        g, {f"out{i}": o for i, o in enumerate(g.outputs())})
+    run, base = _run_pair(prog, p, m, {"data": 2})
+    feeds = _feeds(g, rng)
+    out, ref = run(feeds), base(feeds)
+    for k in out:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(ref[k]), err_msg=k)
+
+
+@pytest.fixture()
+def _stub_opaques(monkeypatch):
+    from repro.models.opaque_stubs import capacity_of, make_stub_opaques
+
+    def apply(g):
+        for kind, fn in make_stub_opaques(capacity_of(g)).items():
+            monkeypatch.setitem(engine.OPAQUE_FNS, kind, fn)
+
+    return apply
+
+
+@needs8
+@pytest.mark.parametrize("phase", ["prefill", "decode"])
+@pytest.mark.parametrize("arch", list(FAMILIES))
+def test_zoo_pipelined_bit_identical(_stub_opaques, arch, phase):
+    """Full zoo, prefill + decode: pipelined logits are bit-identical to
+    the unpipelined stitched-plan compile (mixtral at m=1 — capacity
+    routing couples the batch)."""
+    cfg = reduced(get_config(arch))
+    prog = program_for(cfg, ShapeConfig("eq", phase, 8, 2))
+    g = prog.graph
+    _stub_opaques(g)
+    m = 1 if not batch_splittable(g, "b") else 2
+    run, base = _run_pair(prog, 2, m, {"data": 2, "model": 2})
+    feeds = {}
+    for n in g.nodes:
+        if n.kind != "input":
+            continue
+        if str(np.dtype(n.dtype)) == "int32":
+            feeds[n.name] = RNG.integers(0, cfg.vocab,
+                                         size=n.shape).astype(np.int32)
+        else:
+            feeds[n.name] = (RNG.normal(size=n.shape) * 0.05).astype(
+                np.float32)
+    out = np.asarray(run(feeds)["logits"])
+    ref = np.asarray(base(feeds)["logits"])
+    np.testing.assert_array_equal(out, ref)
+    psc = run.pipeline_schedule
+    assert psc.handoff_elems > 0
+    for s in range(2):
+        assert psc.stage_trace_elems(s) <= psc.stage_priced(s)
+
+
+def test_compile_pipeline_api_guards():
+    from repro import frontend as ein
+
+    g = _layered_graph(2)
+    prog = ein.Program.from_graph(g, {"y": g.outputs()[-1]})
+    spec = PipelineSpec(stages=1)
+    with pytest.raises(ValueError, match="shard_map"):
+        prog.compile(p=2, pipeline=spec)
+    with pytest.raises(ValueError, match="donate"):
+        mesh = make_mesh((1,), ("pp",))
+        prog.compile(mesh=mesh, executor="shard_map", pipeline=spec,
+                     donate=True)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        mesh = make_mesh((1,), ("pp",))
+        prog.compile(mesh=mesh, executor="shard_map", pipeline=spec,
+                     plan=object())
+    with pytest.raises(ValueError):
+        PipelineSpec(stages=0)
+    with pytest.raises(ValueError):
+        PipelineSpec(microbatches=0)
+
+
+@needs4
+def test_compiled_pipeline_surface():
+    """.pipeline_schedule, .collectives (= the combined tagged trace), and
+    .plan (= the stitched baseline plan) are all exposed."""
+    from repro import frontend as ein
+
+    g = _layered_graph(4)
+    prog = ein.Program.from_graph(g, {"y": g.outputs()[-1]})
+    run, _ = _run_pair(prog, 2, 2, {"data": 2})
+    psc = run.pipeline_schedule
+    assert run.collectives is psc.trace
+    assert run.plan is psc.stitched
+    assert run.plan.mode == "mesh"
+    assert run.plan.p == 2  # intra-stage devices (pp rides on top)
+    assert math.prod(psc.sizes.values()) == 4
